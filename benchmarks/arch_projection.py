@@ -1,0 +1,85 @@
+"""TensorDash projection for the 10 assigned architectures.
+
+For each arch (reduced config, real forward pass on synthetic data) we
+measure the operand streams the paper exploits -- FFN activations (element
+and 16-block level), MoE router slot occupancy (structured sparsity), SSM
+projection streams -- and project the TensorDash speedup per stream, with
+the paper's power-gating policy (GCN case: no sparsity -> gated off, 1.0x).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config, reduce_config
+from repro.core.perf_model import ConvLayer, simulate_conv
+from repro.core.powergate import GatePolicy, gated_layer_outcome
+from repro.core.sparsity import measure
+from repro.models import model as M
+from repro.models.common import init_params
+
+
+def _ffn_stream_sparsity(cfg, params, key):
+    """Zero fraction of the (post-activation) FFN hidden stream.  Smooth
+    activations (SiLU/GELU) have no exact zeros -- exactly the paper's GCN
+    case; ReLU-family or induced (pruning/PACT) sparsity lights it up."""
+    x = jax.random.normal(key, (64, cfg.d_model), jnp.float32) * 0.5
+    layers = params.get("layers") or params.get("groups")
+    if layers is None:
+        return 0.0, 0.0
+    mlp = layers.get("mlp") if isinstance(layers, dict) else None
+    if mlp is not None and "w_gate" in mlp:
+        h = jnp.maximum(x @ mlp["w_gate"][0].astype(jnp.float32), 0.0) * (
+            x @ mlp["w_up"][0].astype(jnp.float32)
+        )
+        h = jnp.where(jnp.abs(h) < 1e-8, 0.0, h)
+    elif mlp is not None:  # non-gated
+        h = jnp.maximum(x @ mlp["w_up"][0].astype(jnp.float32), 0.0)
+        h = jnp.where(jnp.abs(h) < 1e-8, 0.0, h)
+    elif isinstance(layers, dict) and "ssm" in layers:
+        w = layers["ssm"]["in_x"]
+        w = w[0] if w.ndim == 3 else w[0, 0]
+        h = x @ w.astype(jnp.float32)
+    elif "shared" in params:  # hybrid: shared block MLP
+        h = jnp.maximum(x @ params["shared"]["mlp"]["w_gate"].astype(jnp.float32), 0.0)
+        h = jnp.where(jnp.abs(h) < 1e-8, 0.0, h)
+    else:
+        return 0.0, 0.0
+    st = measure(h)
+    return float(st.fraction), float(st.block_fraction)
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for arch in ALL_ARCHS:
+        cfg = reduce_config(get_config(arch))
+        params = init_params(M.param_specs(cfg), key, dtype=jnp.float32)
+        if cfg.family == "moe":
+            # structured sparsity: top_k of num_experts slots effectual
+            full = get_config(arch)
+            frac = 1.0 - full.top_k / full.num_experts
+            kind = f"router {full.top_k}/{full.num_experts}"  # structured
+        else:
+            frac, _ = _ffn_stream_sparsity(cfg, params, key)
+            # dense archs ship smooth activations (no exact zeros - the
+            # paper's GCN case); the measured stream is the ReLU-family
+            # proxy: what a squared-ReLU FFN / PACT / pruning would expose
+            kind = "ffn(relu-proxy)" if cfg.family in ("dense",) else "ssm-proj"
+        proj = simulate_conv(
+            ConvLayer("stream", 256, 1, 1, 64, 4, 4), sparsity=frac,
+            sample_groups=1, max_t=16, seed=1,
+        ).speedup
+        gated = gated_layer_outcome(frac, proj)
+        rows.append((arch, kind, frac, gated["speedup"], gated["enabled"]))
+    return rows
+
+
+def main():
+    print(f"{'arch':24s} {'stream':18s} {'sparsity':>9s} {'TD-proj':>8s} {'gate'}")
+    for arch, kind, frac, sp, on in run():
+        print(f"{arch:24s} {kind:18s} {frac:9.1%} {sp:7.2f}x  {'on' if on else 'off (power-gated)'}")
+
+
+if __name__ == "__main__":
+    main()

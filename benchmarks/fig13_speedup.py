@@ -1,0 +1,32 @@
+"""Fig. 13: TensorDash speedup over the dense baseline, per model and per
+training convolution (A*W, W*G, A*G).  Paper average: 1.95x."""
+from __future__ import annotations
+
+from benchmarks.paper_models import LAYERS, conv_sparsity
+from repro.core.perf_model import FWD, BWD_INPUT, BWD_WEIGHT, model_speedup
+
+
+def run(fast: bool = True):
+    rows = []
+    for model in sorted(LAYERS):
+        layers = LAYERS[model][: 4 if fast else None]
+        sp = conv_sparsity(model)
+        res = model_speedup(
+            layers, sp, clustering=0.35, sample_groups=1 if fast else 2,
+            max_t=96 if fast else 256,
+        )
+        rows.append((model, res[FWD], res[BWD_INPUT], res[BWD_WEIGHT], res["overall"]))
+    avg = sum(r[4] for r in rows) / len(rows)
+    return rows, avg
+
+
+def main():
+    rows, avg = run(fast=False)
+    print(f"{'model':16s} {'A*W':>6s} {'W*G':>6s} {'A*G':>6s} {'overall':>8s}")
+    for m, a, b, c, o in rows:
+        print(f"{m:16s} {a:6.2f} {b:6.2f} {c:6.2f} {o:8.2f}")
+    print(f"{'AVERAGE':16s} {'':6s} {'':6s} {'':6s} {avg:8.2f}   (paper: 1.95x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 14: speedup as training progresses.
+
+Two sources: (a) the paper-shaped sparsity trajectories (inverted-U for dense
+models from random init; high-then-settle for pruned ResNet50s) driven
+through the perf model; (b) `examples/train_cnn_sparsity.py` measures REAL
+trajectories by training a ReLU CNN in this repo."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_models import LAYERS, conv_sparsity
+from repro.core.perf_model import FWD, BWD_INPUT, BWD_WEIGHT, model_speedup
+
+
+def sparsity_at(model: str, frac: float) -> dict:
+    base = conv_sparsity(model)
+    if model.endswith("90"):  # pruning: aggressive start, reclaim, settle
+        scale = 1.05 - 0.15 * min(frac / 0.05, 1.0) + 0.05 * frac
+    else:  # dense: low at init, rapid rise, slow decline in 2nd half
+        rise = min(frac / 0.1, 1.0)
+        decline = 1.0 - 0.25 * max(0.0, (frac - 0.45) / 0.55)
+        scale = (0.45 + 0.55 * rise) * decline
+    return {k: min(0.98, v * scale) for k, v in base.items()}
+
+
+def run(models=("alexnet", "resnet50_SM90"), points=6, fast=True):
+    out = {}
+    for model in models:
+        xs, ys = [], []
+        for i in range(points):
+            frac = i / (points - 1)
+            sp = sparsity_at(model, frac)
+            r = model_speedup(
+                LAYERS[model][:3], sp, sample_groups=1, max_t=64 if fast else 128,
+                clustering=0.35, seed=i,
+            )
+            xs.append(round(frac, 2))
+            ys.append(round(r["overall"], 2))
+        out[model] = (xs, ys)
+    return out
+
+
+def main():
+    for model, (xs, ys) in run(points=8, fast=False).items():
+        print(f"{model}: " + " ".join(f"{x:.2f}:{y:.2f}" for x, y in zip(xs, ys)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Fig. 17/18: speedup vs PE rows (1..16, cols=4) and vs columns (4..16,
+rows=4).  Rows share the drain in lockstep -> density imbalance across rows
+(feature-map clustering) costs throughput as rows grow; columns share the
+row schedule -> flat.  Paper: 2.1x @ 1 row -> 1.72x @ 16 rows."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.perf_model import ConvLayer, TileConfig, simulate_conv
+
+
+LAYER = ConvLayer("resnet_conv", 256, 3, 3, 128, 28, 28)
+
+
+def run(sparsity=0.66, clustering=0.55, fast=True):
+    rows_sweep, cols_sweep = [], []
+    for rows in (1, 2, 4, 8, 16):
+        r = simulate_conv(
+            LAYER, sparsity=sparsity, tile=TileConfig(rows=rows, cols=4),
+            clustering=clustering, sample_groups=1, max_t=64 if fast else 192,
+        )
+        rows_sweep.append((rows, round(r.speedup, 2)))
+    for cols in (4, 8, 16):
+        r = simulate_conv(
+            LAYER, sparsity=sparsity, tile=TileConfig(rows=4, cols=cols),
+            clustering=clustering, sample_groups=1, max_t=64 if fast else 192,
+        )
+        cols_sweep.append((cols, round(r.speedup, 2)))
+    return rows_sweep, cols_sweep
+
+
+def main():
+    rows_sweep, cols_sweep = run(fast=False)
+    print("rows (cols=4):", rows_sweep, " paper: 2.1x@1 -> 1.72x@16")
+    print("cols (rows=4):", cols_sweep, " paper: ~flat")
+
+
+if __name__ == "__main__":
+    main()

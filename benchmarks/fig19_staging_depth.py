@@ -1,0 +1,27 @@
+"""Fig. 19: staging-buffer depth 2 (lookahead 1, 5 movements) vs depth 3
+(lookahead 2, 8 movements)."""
+from __future__ import annotations
+
+from repro.core.perf_model import ConvLayer, TileConfig, simulate_conv
+
+LAYER = ConvLayer("resnet_conv", 256, 3, 3, 128, 28, 28)
+
+
+def run(sparsity=0.66, fast=True):
+    out = {}
+    for la in (1, 2):
+        r = simulate_conv(
+            LAYER, sparsity=sparsity, tile=TileConfig(lookahead=la),
+            clustering=0.35, sample_groups=1, max_t=64 if fast else 192,
+        )
+        out[la + 1] = round(r.speedup, 2)
+    return out
+
+
+def main():
+    out = run(fast=False)
+    print(f"staging depth 2: {out[2]}x   depth 3: {out[3]}x  (paper: depth-2 lower but considerable)")
+
+
+if __name__ == "__main__":
+    main()

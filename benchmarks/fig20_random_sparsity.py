@@ -1,0 +1,34 @@
+"""Fig. 20: speedup on synthetically sparse tensors, 10%..90%, using the
+third conv layer of DenseNet121 (paper methodology).  TensorDash should
+track the ideal min(1/(1-sparsity), 3) closely: paper reports 1.1x @ 10%
+and 2.95x @ 90%."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.perf_model import ConvLayer, TileConfig, simulate_conv
+
+LAYER = ConvLayer("densenet_conv3", 128, 3, 3, 32, 56, 56)
+
+
+def run(fast=True):
+    out = []
+    for s10 in range(1, 10):
+        s = s10 / 10.0
+        r = simulate_conv(
+            LAYER, sparsity=s, tile=TileConfig(), clustering=0.0,
+            sample_groups=1, max_t=64 if fast else 192, seed=s10,
+        )
+        ideal = min(1.0 / max(1.0 - s, 1e-9), 3.0)
+        out.append((s, round(r.speedup, 2), round(ideal, 2)))
+    return out
+
+
+def main():
+    print("sparsity  tensordash  ideal(capped 3x)")
+    for s, td, ideal in run(fast=False):
+        print(f"  {s:.1f}      {td:5.2f}      {ideal:5.2f}")
+
+
+if __name__ == "__main__":
+    main()

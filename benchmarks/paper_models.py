@@ -1,0 +1,118 @@
+"""Layer shapes + operand sparsity for the paper's evaluation models.
+
+The paper traces one random batch per epoch of real ImageNet/MSCOCO/SNLI GPU
+training.  Those datasets/GPU traces are unavailable offline, so each model
+carries per-operand zero fractions calibrated to the paper's reported
+numbers (Fig. 1 potential ~3x average; Fig. 13 speedups averaging 1.95x;
+DenseNet121's BatchNorm absorbing gradient sparsity; ~90% weight sparsity for
+the two pruned ResNet50 variants).  `examples/train_cnn_sparsity.py` provides
+*measured* dynamics from a real ReLU CNN trained in this repo.
+
+Representative conv/FC layers per model (c_in, k, k, c_out, ox, oy); FC
+layers are 1x1x1 convs, as the paper treats them.
+"""
+from __future__ import annotations
+
+from repro.core.perf_model import FWD, BWD_INPUT, BWD_WEIGHT, ConvLayer
+
+
+def _fc(name, c_in, c_out):
+    return ConvLayer(name, c_in, 1, 1, c_out, 1, 1)
+
+
+ALEXNET = [
+    ConvLayer("conv1", 3, 11, 11, 64, 55, 55, 4),
+    ConvLayer("conv2", 64, 5, 5, 192, 27, 27),
+    ConvLayer("conv3", 192, 3, 3, 384, 13, 13),
+    ConvLayer("conv4", 384, 3, 3, 256, 13, 13),
+    ConvLayer("conv5", 256, 3, 3, 256, 13, 13),
+    _fc("fc6", 9216, 4096),
+    _fc("fc7", 4096, 4096),
+    _fc("fc8", 4096, 1000),
+]
+
+VGG16 = [
+    ConvLayer("conv1_2", 64, 3, 3, 64, 224, 224),
+    ConvLayer("conv2_2", 128, 3, 3, 128, 112, 112),
+    ConvLayer("conv3_3", 256, 3, 3, 256, 56, 56),
+    ConvLayer("conv4_3", 512, 3, 3, 512, 28, 28),
+    ConvLayer("conv5_3", 512, 3, 3, 512, 14, 14),
+    _fc("fc6", 25088, 4096),
+    _fc("fc7", 4096, 4096),
+]
+
+RESNET50 = [
+    ConvLayer("conv1", 3, 7, 7, 64, 112, 112, 2),
+    ConvLayer("res2_3x3", 64, 3, 3, 64, 56, 56),
+    ConvLayer("res3_3x3", 128, 3, 3, 128, 28, 28),
+    ConvLayer("res4_3x3", 256, 3, 3, 256, 14, 14),
+    ConvLayer("res5_3x3", 512, 3, 3, 512, 7, 7),
+    ConvLayer("res4_1x1", 1024, 1, 1, 256, 14, 14),
+    _fc("fc", 2048, 1000),
+]
+
+SQUEEZENET = [
+    ConvLayer("conv1", 3, 7, 7, 96, 111, 111, 2),
+    ConvLayer("fire4_e3", 32, 3, 3, 128, 27, 27),
+    ConvLayer("fire6_e3", 48, 3, 3, 192, 13, 13),
+    ConvLayer("fire8_e3", 64, 3, 3, 256, 13, 13),
+    ConvLayer("conv10", 512, 1, 1, 1000, 13, 13),
+]
+
+DENSENET121 = [
+    ConvLayer("conv1", 3, 7, 7, 64, 112, 112, 2),
+    ConvLayer("db2_3x3", 128, 3, 3, 32, 28, 28),
+    ConvLayer("db3_3x3", 128, 3, 3, 32, 14, 14),
+    ConvLayer("db4_3x3", 128, 3, 3, 32, 7, 7),
+    ConvLayer("db3_1x1", 512, 1, 1, 128, 14, 14),
+]
+
+IMG2TXT = [  # show-and-tell decoder (LSTM gates as FC) + embedding head
+    _fc("lstm_x", 512, 2048),
+    _fc("lstm_h", 512, 2048),
+    _fc("head", 512, 12000),
+]
+
+SNLI = [
+    _fc("proj", 300, 512),
+    _fc("lstm_x", 512, 2048),
+    _fc("lstm_h", 512, 2048),
+    _fc("cls", 1024, 512),
+]
+
+# operand zero fractions (A = activations, G = output gradients, W = weights)
+SPARSITY = {
+    "alexnet": {"A": 0.70, "G": 0.78, "W": 0.0},
+    "vgg16": {"A": 0.66, "G": 0.74, "W": 0.0},
+    "resnet50": {"A": 0.52, "G": 0.58, "W": 0.0},
+    "resnet50_DS90": {"A": 0.58, "G": 0.62, "W": 0.90},
+    "resnet50_SM90": {"A": 0.50, "G": 0.52, "W": 0.90},
+    "squeezenet": {"A": 0.60, "G": 0.68, "W": 0.0},
+    "densenet121": {"A": 0.38, "G": 0.05, "W": 0.0},  # BN absorbs grad sparsity
+    "img2txt": {"A": 0.58, "G": 0.62, "W": 0.0},
+    "snli": {"A": 0.52, "G": 0.58, "W": 0.0},
+}
+
+LAYERS = {
+    "alexnet": ALEXNET,
+    "vgg16": VGG16,
+    "resnet50": RESNET50,
+    "resnet50_DS90": RESNET50,
+    "resnet50_SM90": RESNET50,
+    "squeezenet": SQUEEZENET,
+    "densenet121": DENSENET121,
+    "img2txt": IMG2TXT,
+    "snli": SNLI,
+}
+
+
+def conv_sparsity(model: str) -> dict[str, float]:
+    """Per-convolution sparse-operand fraction: the paper targets A for
+    Eq. (1), G_O for Eq. (2), and max(G_O, A) for Eq. (3); with training-time
+    pruning the weight side may be the sparser choice for Eqs. (1)/(2)."""
+    s = SPARSITY[model]
+    return {
+        FWD: max(s["A"], s["W"]),
+        BWD_INPUT: max(s["G"], s["W"]),
+        BWD_WEIGHT: max(s["G"], s["A"]),
+    }

@@ -1,0 +1,145 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``derived`` is a semicolon-joined
+summary of the reproduced numbers (no commas, CSV-safe).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def bench_fig13():
+    from benchmarks.fig13_speedup import run
+
+    (rows, avg), us = _timed(run, fast=True)
+    per = " ".join(f"{m}={o:.2f}x" for m, _, _, _, o in rows)
+    return us, f"avg={avg:.2f}x (paper 1.95x); {per}"
+
+
+def bench_fig14():
+    from benchmarks.fig14_over_time import run
+
+    out, us = _timed(run, points=5, fast=True)
+    s = []
+    for m, (xs, ys) in out.items():
+        s.append(f"{m}:" + "/".join(f"{y:.2f}" for y in ys))
+    return us, "epoch-fraction speedups " + " ".join(s)
+
+
+def bench_fig17_18():
+    from benchmarks.fig17_18_tile_geometry import run
+
+    (rows_sweep, cols_sweep), us = _timed(run, fast=True)
+    r = " ".join(f"r{n}={v:.2f}" for n, v in rows_sweep)
+    c = " ".join(f"c{n}={v:.2f}" for n, v in cols_sweep)
+    return us, f"{r}; {c} (paper 2.1x@1row->1.72x@16rows; cols flat)"
+
+
+def bench_fig19():
+    from benchmarks.fig19_staging_depth import run
+
+    out, us = _timed(run, fast=True)
+    return us, f"depth2={out[2]:.2f}x depth3={out[3]:.2f}x"
+
+
+def bench_fig20():
+    from benchmarks.fig20_random_sparsity import run
+
+    out, us = _timed(run, fast=True)
+    pts = " ".join(f"{s:.1f}:{td:.2f}(id {i:.2f})" for s, td, i in out[::2])
+    return us, f"{pts} (paper 1.1x@10% 2.95x@90%)"
+
+
+def bench_table3():
+    from benchmarks.table3_energy import run
+
+    out, us = _timed(run)
+    return us, (
+        f"fp32_area={out['fp32_compute_area_overhead']}x(paper1.09) "
+        f"bf16_area={out['bf16_compute_area_overhead']}x(paper1.13) "
+        f"compute_eff={out['fp32_compute_efficiency']}x(paper1.89) "
+        f"chip_eff={out['fp32_chip_efficiency']}x(paper1.6)"
+    )
+
+
+def bench_scheduler_step():
+    """Microbenchmark: one 16-lane schedule step (vmapped x4096)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.scheduler import make_schedule_step
+
+    step = jax.jit(jax.vmap(lambda z: make_schedule_step()(z).sel))
+    z = jnp.asarray(np.random.default_rng(0).random((4096, 3, 16)) < 0.4)
+    step(z).block_until_ready()
+    t0 = time.time()
+    n = 20
+    for _ in range(n):
+        step(z).block_until_ready()
+    us = (time.time() - t0) / n * 1e6
+    return us, "4096 PEs per call; combinational schedule model"
+
+
+def bench_spmm_kernel():
+    """Microbenchmark: TensorDash block-sparse matmul (interpret mode) vs
+    the dense oracle on a 50%-block-sparse operand."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.ops import matmul
+    from repro.kernels.tensordash_spmm import plan_blocks
+
+    rng = np.random.default_rng(0)
+    m, k, n = 128, 256, 64
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    mask = rng.random((m // 16, k // 32)) < 0.5
+    a = (a.reshape(m // 16, 16, k // 32, 32) * mask[:, None, :, None]).reshape(m, k)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    out, us = _timed(matmul, jnp.asarray(a), jnp.asarray(b), mode="interpret", bm=16, bk=32, bn=16)
+    ref = a @ b
+    err = float(abs(np.asarray(out) - ref).max())
+    nnz, _ = plan_blocks(jnp.asarray(a), 16, 32)
+    skipped = 1.0 - float(nnz.sum()) / (mask.size)
+    return us, f"max_err={err:.1e} blocks_skipped={skipped:.0%} (interpret-mode validation)"
+
+
+def bench_arch_projection():
+    from benchmarks.arch_projection import run
+
+    rows, us = _timed(run)
+    body = " ".join(f"{a}={sp:.2f}x{'' if on else '(gated-off)'}" for a, _, _, sp, on in rows)
+    return us, body
+
+
+BENCHES = [
+    ("fig13_speedup_per_model", bench_fig13),
+    ("fig14_speedup_over_training", bench_fig14),
+    ("fig17_18_tile_geometry", bench_fig17_18),
+    ("fig19_staging_depth", bench_fig19),
+    ("fig20_random_sparsity", bench_fig20),
+    ("table3_area_power_energy", bench_table3),
+    ("scheduler_step_micro", bench_scheduler_step),
+    ("tensordash_spmm_micro", bench_spmm_kernel),
+    ("arch_tensordash_projection", bench_arch_projection),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.0f},{derived}")
+        except Exception as e:  # pragma: no cover
+            print(f"{name},-1,FAILED {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Table 3 + Fig. 15/16: area/power overheads and energy efficiency
+(analytical model calibrated to the paper's synthesis results)."""
+from __future__ import annotations
+
+from repro.core.energy import BF16, FP32, EnergyModel
+
+
+def run(speedup: float = 1.95):
+    em32, em16 = EnergyModel(FP32), EnergyModel(BF16)
+    eff = em32.efficiency(speedup, sram_compression=1.4)
+    eff16 = em16.efficiency(1.9, sram_compression=1.4)
+    return {
+        "fp32_compute_area_overhead": round(em32.compute_area_overhead(), 3),
+        "fp32_chip_area_overhead": round(em32.chip_area_overhead(), 4),
+        "bf16_compute_area_overhead": round(em16.compute_area_overhead(), 3),
+        "fp32_compute_efficiency": round(eff["compute_efficiency"], 2),
+        "fp32_chip_efficiency": round(eff["chip_efficiency"], 2),
+        "bf16_compute_efficiency": round(eff16["compute_efficiency"], 2),
+        "bf16_chip_efficiency": round(eff16["chip_efficiency"], 2),
+        "energy_breakdown_base_J": {
+            "core": eff["base_core_j"], "sram": eff["base_sram_j"], "dram": eff["base_dram_j"],
+        },
+        "energy_breakdown_td_J": {
+            "core": eff["td_core_j"], "sram": eff["td_sram_j"], "dram": eff["td_dram_j"],
+        },
+    }
+
+
+def main():
+    for k, v in run().items():
+        print(f"{k}: {v}")
+    print("paper: 1.09x fp32 area, 1.13x bf16 area, 1.89x compute eff, 1.6x chip eff")
+
+
+if __name__ == "__main__":
+    main()

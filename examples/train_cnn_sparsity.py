@@ -1,0 +1,110 @@
+"""Reproduce Fig. 14's dynamics with *measured* sparsity from real training.
+
+Trains a small ReLU CNN classifier in pure JAX on a synthetic-but-learnable
+image task, and after every epoch measures the actual zero fractions of
+(a) post-ReLU activations A and (b) output-activation gradients G_O (via the
+zero-probe trick), for every conv layer.  The measured fractions drive the
+TensorDash perf model, giving the speedup-vs-epoch curve the paper plots.
+
+  PYTHONPATH=src python examples/train_cnn_sparsity.py --epochs 6
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perf_model import FWD, BWD_INPUT, BWD_WEIGHT, ConvLayer, model_speedup
+from repro.core.sparsity import apply_probes
+
+
+def make_data(rng, n, size=12, classes=4):
+    """Images whose class is a quadrant-localised blob + noise (learnable)."""
+    y = rng.integers(0, classes, n)
+    x = rng.standard_normal((n, size, size, 3)).astype(np.float32) * 0.3
+    for i, c in enumerate(y):
+        r, col = divmod(int(c), 2)
+        x[i, r * 6 : r * 6 + 6, col * 6 : col * 6 + 6, :] += 1.2
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def init_cnn(key, channels=(3, 16, 32), classes=4):
+    ks = jax.random.split(key, len(channels))
+    params = {}
+    for i in range(len(channels) - 1):
+        fan = channels[i] * 9
+        params[f"conv{i}"] = jax.random.normal(ks[i], (3, 3, channels[i], channels[i + 1])) / np.sqrt(fan)
+    params["head"] = jax.random.normal(ks[-1], (channels[-1], classes)) * 0.05
+    return params
+
+
+def forward(params, x, probes=None):
+    h = x
+    acts = {}
+    for i in range(2):
+        h = jax.lax.conv_general_dilated(
+            h, params[f"conv{i}"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        h = jnp.maximum(h, 0.0)  # ReLU: the paper's source of natural sparsity
+        h = apply_probes(h, probes, f"g{i}")
+        acts[f"a{i}"] = h
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    pooled = jnp.mean(h, axis=(1, 2))
+    return pooled @ params["head"], acts
+
+
+def loss_fn(params, x, y, probes=None):
+    logits, acts = forward(params, x, probes)
+    ll = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(ll, y[:, None], 1)), acts
+
+
+def measure_epoch(params, x, y):
+    """A and G_O zero fractions per conv layer (exact zeros, like the paper)."""
+    _, acts = forward(params, x)
+    a_sp = {k: float(jnp.mean(v == 0)) for k, v in acts.items()}
+    probes = {f"g{i}": jnp.zeros_like(acts[f"a{i}"]) for i in range(2)}
+    g = jax.grad(lambda pr: loss_fn(params, x, y, pr)[0])(probes)
+    g_sp = {k: float(jnp.mean(v == 0)) for k, v in g.items()}
+    return a_sp, g_sp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--steps-per-epoch", type=int, default=25)
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    xtr, ytr = make_data(rng, 512)
+    params = init_cnn(jax.random.PRNGKey(0))
+    layers = [ConvLayer("conv0", 3, 3, 3, 16, 12, 12), ConvLayer("conv1", 16, 3, 3, 32, 6, 6)]
+
+    @jax.jit
+    def step(params, x, y):
+        l, grads = jax.value_and_grad(lambda p: loss_fn(p, x, y)[0])(params)
+        return l, jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+
+    print("epoch  loss   A-sparsity  G-sparsity  TensorDash-speedup")
+    for epoch in range(args.epochs):
+        a_sp, g_sp = measure_epoch(params, xtr[:128], ytr[:128])
+        a_bar = float(np.mean(list(a_sp.values())))
+        g_bar = float(np.mean(list(g_sp.values())))
+        sp = {FWD: a_bar, BWD_INPUT: g_bar, BWD_WEIGHT: max(a_bar, g_bar)}
+        proj = model_speedup(layers, sp, sample_groups=1, max_t=48, seed=epoch)
+        loss = float("nan")
+        for i in range(args.steps_per_epoch):
+            idx = rng.integers(0, len(xtr), args.batch)
+            loss, params = step(params, xtr[idx], ytr[idx])
+        print(
+            f"{epoch:4d}  {float(loss):6.3f}   {a_bar:8.2%}   {g_bar:8.2%}"
+            f"   {proj['overall']:.2f}x  (A*W {proj[FWD]:.2f} / W*G {proj[BWD_INPUT]:.2f}"
+            f" / A*G {proj[BWD_WEIGHT]:.2f})"
+        )
+    print("\nPaper Fig. 14: dense-model speedup rises in early epochs as the "
+          "net learns which features are irrelevant, then stabilises.")
+
+
+if __name__ == "__main__":
+    main()

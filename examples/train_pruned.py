@@ -1,0 +1,67 @@
+"""Training-time pruning amplifies TensorDash (paper §4: resnet50_DS90/SM90).
+
+Trains a tiny LM while gradually magnitude-pruning to a target sparsity
+(Zhu-Gupta cubic ramp, masks refreshed so weights can regrow — dynamic
+sparse reparameterization).  After each refresh the *measured* weight
+sparsity drives the TensorDash perf model: the projected speedup climbs
+toward the staging-buffer ceiling as pruning proceeds, and the scheduled-
+form codec (paper §3.6) shows the matching checkpoint-footprint shrink.
+
+  PYTHONPATH=src python examples/train_pruned.py --steps 60 --target 0.9
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.codec import compressed_bytes, encode
+from repro.configs import get_config, reduce_config
+from repro.core.perf_model import ConvLayer, simulate_conv
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.models.common import init_params
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.optim.sparsify import apply_masks, init_prune, prune_schedule, refresh_masks
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--target", type=float, default=0.9)
+    ap.add_argument("--refresh-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config("deepseek-7b"))
+    data = SyntheticLM(cfg.vocab_size, 32, 8, seed=11)
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    prune = init_prune(params)
+    step_fn = jax.jit(make_train_step(cfg, OptConfig(lr=2e-3, warmup_steps=5, total_steps=args.steps)))
+
+    print("step  loss   weight-sparsity  TensorDash-proj  ckpt-codec")
+    for i in range(args.steps):
+        params, opt, m = step_fn(params, opt, data.batch_at(i))
+        if (i + 1) % args.refresh_every == 0:
+            target_now = float(prune_schedule(jnp.int32(i), args.target, 0, args.steps))
+            prune = refresh_masks(params, prune, target_now)
+            params = apply_masks(params, prune)
+            w = params["layers"]["mlp"]["w_gate"]
+            frac = float(jnp.mean(w == 0))
+            proj = simulate_conv(
+                ConvLayer("ffn", cfg.d_model, 1, 1, cfg.d_ff, 1, 1),
+                sparsity=frac, sample_groups=1, max_t=32, seed=i,
+            )
+            enc = encode(np.asarray(jax.device_get(w)).reshape(-1, w.shape[-1]))
+            ratio = compressed_bytes(enc) / np.asarray(w).nbytes
+            print(
+                f"{i+1:4d}  {float(m['loss']):5.2f}   {frac:8.1%}        "
+                f"{proj.speedup:4.2f}x         {ratio:5.1%} of dense"
+            )
+    print("\nPaper: pruned-to-90% models sustain ~1.8-2.3x on the weight-side"
+          " stream; the codec shrinks footprints in step with sparsity.")
+
+
+if __name__ == "__main__":
+    main()

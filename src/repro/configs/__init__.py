@@ -1,0 +1,26 @@
+"""Architecture registry: importing this package registers all configs."""
+from repro.configs.base import (
+    REGISTRY,
+    SHAPES,
+    InputShape,
+    ModelConfig,
+    cells,
+    get_config,
+    input_specs,
+    register,
+)
+from repro.configs.smoke import reduce_config
+from repro.configs import (  # noqa: F401
+    deepseek_7b,
+    gemma2_2b,
+    starcoder2_3b,
+    qwen3_4b,
+    zamba2_2p7b,
+    deepseek_v2_236b,
+    qwen3_moe_235b,
+    mamba2_780m,
+    qwen2_vl_72b,
+    musicgen_large,
+)
+
+ALL_ARCHS = sorted(REGISTRY)

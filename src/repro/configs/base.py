@@ -1,0 +1,207 @@
+"""ModelConfig — single config type covering all 10 assigned architectures —
+plus the assigned input-shape registry and ``input_specs()`` (ShapeDtypeStruct
+stand-ins for the dry-run; no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+REGISTRY: dict[str, "ModelConfig"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    # attention variants
+    activation: str = "silu"
+    mlp_gated: bool = True
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    sliding_window: int | None = None
+    local_global_alternate: bool = False  # gemma2: odd layers global
+    post_norms: bool = False  # gemma2 sandwich norms
+    embed_scale: bool = False  # gemma: x *= sqrt(d)
+    mrope_sections: tuple | None = None  # qwen2-vl
+    # MLA (deepseek-v2)
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    num_shared_experts: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    moe_a2a_quant: bool = True  # int8 dispatch payloads (beyond-paper, §Perf 5)
+    # SSM
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    conv_width: int = 4
+    # hybrid (zamba2)
+    attn_every: int = 0  # one shared attention block per group of this size
+    shared_attn_heads: int = 0
+    shared_attn_kv_heads: int = 0
+    shared_d_ff: int = 0
+    # modality frontend stub
+    frontend: str | None = None  # vision | audio
+    num_codebooks: int = 1
+    # execution
+    q_chunk: int = 1024
+    remat: bool = True
+    unroll: bool = False  # dry-run: unroll scans so cost_analysis counts every layer
+    taps: bool = False  # TensorDash sparsity instrumentation
+    kv_cache_quant: bool = False  # int8 KV cache (GQA archs; §Perf iteration 7)
+    ffn_kernel_mode: str = "dense"  # dense | pallas | interpret
+    # capability flags
+    sub_quadratic: bool = False  # may run long_500k
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, l, v = self.d_model, self.num_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        n = v * d  # embed
+        n += v * d * (self.num_codebooks if self.frontend == "audio" else 1)  # head
+        if self.family in ("dense", "moe"):
+            if self.use_mla:
+                attn = (
+                    d * self.q_lora_rank
+                    + self.q_lora_rank * self.num_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+                    + d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                    + self.kv_lora_rank * self.num_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                    + self.num_heads * self.v_head_dim * d
+                )
+            else:
+                attn = d * hd * (self.num_heads * 2 + self.num_kv_heads * 2)
+            if self.family == "moe":
+                moe_l = l - self.first_dense_layers
+                ffn = moe_l * 3 * d * self.moe_d_ff * (self.num_experts + self.num_shared_experts)
+                ffn += self.first_dense_layers * 3 * d * self.d_ff
+                n += l * attn + ffn
+            else:
+                per_ffn = (3 if self.mlp_gated else 2) * d * self.d_ff
+                n += l * (attn + per_ffn)
+        elif self.family == "ssm":
+            di = self.ssm_expand * d
+            n += l * (3 * d * di + 2 * d * self.ssm_state + di * d)
+        elif self.family == "hybrid":
+            di = self.ssm_expand * d
+            n += l * (3 * d * di + 2 * d * self.ssm_state + di * d)
+            shd = self.shared_attn_heads * (d // max(self.shared_attn_heads, 1))
+            n += 2 * d * d + 4 * d * shd + 3 * d * self.shared_d_ff  # shared block
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE): for MODEL_FLOPS of MoE archs."""
+        if self.family != "moe":
+            return self.param_count()
+        d, l = self.d_model, self.num_layers
+        total = self.param_count()
+        moe_l = l - self.first_dense_layers
+        all_experts = moe_l * 3 * d * self.moe_d_ff * self.num_experts
+        active = moe_l * 3 * d * self.moe_d_ff * self.top_k
+        return total - all_experts + active
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populate registry)
+
+    return REGISTRY[name]
+
+
+def cells(cfg: ModelConfig):
+    """The (arch x shape) cells this config runs (long_500k only for
+    sub-quadratic archs — full-attention skip documented in DESIGN.md)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        out.append("long_500k")
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    ``train``  -> tokens/labels (or frontend embeddings) for ``train_step``.
+    ``prefill``-> tokens for ``prefill_step``.
+    ``decode`` -> one new token + the KV-cache/state pytree of ``seq_len``.
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    f32, bf16, i32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "vision":
+            batch = {
+                "inputs_embeds": sds((b, s, cfg.d_model), bf16),
+                "positions": sds((b, 3, s), i32),
+                "labels": sds((b, s), i32),
+            }
+        elif cfg.frontend == "audio":
+            batch = {
+                "inputs_embeds": sds((b, s, cfg.d_model), bf16),
+                "labels": sds((b, s, cfg.num_codebooks), i32),
+            }
+        else:
+            batch = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return batch
+
+    # decode: one token step against a pre-filled cache of length s
+    from repro.models.model import abstract_cache  # circular-safe local import
+
+    if cfg.frontend in ("vision", "audio"):
+        step = {"inputs_embeds": sds((b, 1, cfg.d_model), bf16)}
+    else:
+        step = {"tokens": sds((b, 1), i32)}
+    step["cache"] = abstract_cache(cfg, b, s)
+    step["pos"] = sds((), i32)
+    return step

@@ -1,0 +1,16 @@
+"""Mamba2-780M: attention-free SSD [arXiv:2405.21060].  Sub-quadratic =>
+runs long_500k.  TensorDash applies to the projection/SSD matmuls only
+(DESIGN.md §Arch-applicability)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    sub_quadratic=True,
+))

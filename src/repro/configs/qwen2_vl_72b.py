@@ -1,0 +1,20 @@
+"""Qwen2-VL-72B backbone: M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+Vision frontend is a STUB: input_specs() provides precomputed patch/text
+embeddings + 3D M-RoPE positions."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-72b",
+    family="dense",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    mrope_sections=(16, 24, 24),
+    rope_theta=1e6,
+    activation="silu",
+    frontend="vision",
+))

@@ -1,0 +1,20 @@
+"""Zamba2-2.7B hybrid: Mamba2 stack + shared attention block every 6 layers
+[arXiv:2411.15242; hf].  Sub-quadratic => runs long_500k."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_headdim=64,
+    ssm_expand=2,
+    attn_every=6,
+    shared_attn_heads=32,
+    shared_attn_kv_heads=32,
+    shared_d_ff=10240,
+    activation="gelu",
+    sub_quadratic=True,
+))

@@ -1,0 +1,27 @@
+"""TensorDash core: the paper's contribution as composable JAX modules."""
+from repro.core.scheduler import connectivity, levels, make_schedule_step, drain_count
+from repro.core.pe import simulate_stream, simulate_tile, effectual_mask, dense_cycles
+from repro.core.compress import Scheduled, compress, decompress, simulate_macs
+from repro.core.perf_model import (
+    TileConfig,
+    AcceleratorConfig,
+    ConvLayer,
+    ConvResult,
+    simulate_conv,
+    model_speedup,
+    make_clustered_masks,
+    FWD,
+    BWD_INPUT,
+    BWD_WEIGHT,
+)
+from repro.core.sparsity import (
+    SparsityStats,
+    measure,
+    merge_stats,
+    block_mask,
+    block_density,
+    lane_streams,
+    apply_probes,
+    grad_sparsity,
+)
+from repro.core.energy import EnergyModel, EnergyBreakdown, FP32, BF16

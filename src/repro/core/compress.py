@@ -1,0 +1,168 @@
+"""Scheduled-form (value, idx) compression codec — paper sections 3.6/3.7.
+
+TensorDash's scheduler doubles as a compression engine: a dense stream of
+``[T, n_lanes]`` values is consumed by the (one-side) scheduler in
+``C <= T`` cycles; storing the ``C`` packed rows together with the per-lane
+mux selections (``idx`` = the MS signal, 3 bits/lane) and the per-cycle row
+advance (AS, 2 bits) is a lossless encoding of the dense tensor.  The
+decompressor (Fig. 12 of the paper) is the mirror of the mux stage: each
+packed value is scattered back to its original (step, lane) position.
+
+This is used by the framework as (a) the activation-offload codec, (b) a
+checkpoint codec for sparse tensors, and (c) the memory-traffic model of the
+energy analysis (fewer rows read => fewer scratchpad/SRAM accesses).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduler import connectivity, make_schedule_step
+
+__all__ = ["Scheduled", "compress", "decompress", "simulate_macs"]
+
+
+class Scheduled(NamedTuple):
+    """Scheduled-form tensor.  Rows beyond ``n_cycles`` are zero padding."""
+
+    values: jax.Array  # [T, n_lanes] packed values (only first n_cycles valid)
+    sel: jax.Array  # [T, n_lanes] int32 mux selections; == n_options -> idle
+    advance: jax.Array  # [T] int32 AS per cycle
+    n_cycles: jax.Array  # int32 scalar: number of valid packed rows
+
+
+@functools.partial(jax.jit, static_argnames=("n_lanes", "lookahead"))
+def compress(x: jax.Array, *, n_lanes: int = 16, lookahead: int = 2) -> Scheduled:
+    """One-side schedule of ``x [T, n_lanes]`` into scheduled form."""
+    t = x.shape[0]
+    depth = lookahead + 1
+    step_fn = make_schedule_step(n_lanes, lookahead)
+    n_options = step_fn.n_options
+    steps_t = jnp.asarray(step_fn.steps_table)
+    lanes_t = jnp.asarray(step_fn.lanes_table)
+    lane_ids = jnp.arange(n_lanes)
+
+    pad = jnp.zeros((lookahead, n_lanes), x.dtype)
+    x_pad = jnp.concatenate([x, pad], axis=0)
+    z0 = jnp.concatenate([x != 0, jnp.zeros((lookahead, n_lanes), bool)], axis=0)
+
+    def body(state, _):
+        zbuf, p, done = state
+        window = jax.lax.dynamic_slice(zbuf, (p, 0), (depth, n_lanes))
+        res = step_fn(window)
+        zbuf = jax.lax.dynamic_update_slice(zbuf, res.z_out, (p, 0))
+        valid = res.sel < n_options
+        pick = jnp.minimum(res.sel, n_options - 1)
+        src_step = steps_t[lane_ids, pick]
+        src_lane = lanes_t[lane_ids, pick]
+        vals = jnp.where(
+            valid,
+            x_pad[jnp.clip(p + src_step, 0, t + lookahead - 1), src_lane],
+            jnp.zeros((), x.dtype),
+        )
+        emitted = ~done
+        out = (
+            jnp.where(emitted, vals, jnp.zeros_like(vals)),
+            jnp.where(emitted, jnp.where(valid, res.sel, n_options), n_options),
+            jnp.where(emitted, res.advance, 0).astype(jnp.int32),
+            emitted,
+        )
+        p = p + res.advance
+        done = p >= t
+        return (zbuf, p, done), out
+
+    init = (z0, jnp.int32(0), jnp.asarray(t <= 0))
+    _, (vals, sel, adv, emitted) = jax.lax.scan(body, init, None, length=t)
+    return Scheduled(
+        values=vals,
+        sel=sel.astype(jnp.int32),
+        advance=adv,
+        n_cycles=jnp.sum(emitted).astype(jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("t", "n_lanes", "lookahead"))
+def decompress(
+    s: Scheduled, *, t: int, n_lanes: int = 16, lookahead: int = 2
+) -> jax.Array:
+    """Fig. 12 decompressor: scheduled form back to dense ``[t, n_lanes]``."""
+    step_fn = make_schedule_step(n_lanes, lookahead)
+    n_options = step_fn.n_options
+    steps_t = jnp.asarray(step_fn.steps_table)
+    lanes_t = jnp.asarray(step_fn.lanes_table)
+    lane_ids = jnp.arange(n_lanes)
+    buf = jnp.zeros((t + lookahead, n_lanes), s.values.dtype)
+
+    def body(state, row):
+        buf, p = state
+        vals, sel, adv = row
+        valid = sel < n_options
+        pick = jnp.minimum(sel, n_options - 1)
+        dst_step = steps_t[lane_ids, pick]
+        dst_lane = lanes_t[lane_ids, pick]
+        # out-of-bounds rows (invalid lanes) are dropped by the scatter
+        dst_row = jnp.where(valid, p + dst_step, t + lookahead)
+        buf = buf.at[dst_row, dst_lane].set(vals, mode="drop")
+        return (buf, p + adv), None
+
+    (buf, _), _ = jax.lax.scan(body, (buf, jnp.int32(0)), (s.values, s.sel, s.advance))
+    return buf[:t]
+
+
+@functools.partial(jax.jit, static_argnames=("n_lanes", "lookahead", "two_side"))
+def simulate_macs(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    n_lanes: int = 16,
+    lookahead: int = 2,
+    two_side: bool = True,
+):
+    """Functional simulation of the TensorDash PE MAC datapath.
+
+    Consumes value streams ``a, b [T, n_lanes]`` through the scheduler (both
+    operands move in tandem through the same mux selections, as in the
+    hardware) and returns ``(accumulator, cycles)``.  The accumulator must
+    equal ``sum(a * b)`` exactly — TensorDash does not affect numerical
+    fidelity (it only elides multiplications by zero).
+    """
+    t = a.shape[0]
+    depth = lookahead + 1
+    step_fn = make_schedule_step(n_lanes, lookahead)
+    n_options = step_fn.n_options
+    steps_t = jnp.asarray(step_fn.steps_table)
+    lanes_t = jnp.asarray(step_fn.lanes_table)
+    lane_ids = jnp.arange(n_lanes)
+
+    pad = jnp.zeros((lookahead, n_lanes), a.dtype)
+    a_pad = jnp.concatenate([a, pad], axis=0)
+    b_pad = jnp.concatenate([b, pad.astype(b.dtype)], axis=0)
+    if two_side:
+        z0 = (a != 0) & (b != 0)
+    else:
+        z0 = b != 0
+    z0 = jnp.concatenate([z0, jnp.zeros((lookahead, n_lanes), bool)], axis=0)
+
+    def body(state, _):
+        zbuf, p, acc, cycles, done = state
+        window = jax.lax.dynamic_slice(zbuf, (p, 0), (depth, n_lanes))
+        res = step_fn(window)
+        zbuf = jax.lax.dynamic_update_slice(zbuf, res.z_out, (p, 0))
+        valid = res.sel < n_options
+        pick = jnp.minimum(res.sel, n_options - 1)
+        rows = jnp.clip(p + steps_t[lane_ids, pick], 0, t + lookahead - 1)
+        cols = lanes_t[lane_ids, pick]
+        av = jnp.where(valid, a_pad[rows, cols], 0)
+        bv = jnp.where(valid, b_pad[rows, cols], 0)
+        acc = acc + jnp.sum(av.astype(jnp.float64 if a.dtype == jnp.float64 else jnp.float32) * bv)
+        cycles = cycles + jnp.where(done, 0, 1).astype(jnp.int32)
+        p = p + res.advance
+        done = p >= t
+        return (zbuf, p, acc, cycles, done), None
+
+    init = (z0, jnp.int32(0), jnp.zeros((), jnp.float32), jnp.int32(0), jnp.asarray(t <= 0))
+    (_, _, acc, cycles, _), _ = jax.lax.scan(body, init, None, length=t)
+    return acc, cycles

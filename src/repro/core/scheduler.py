@@ -1,0 +1,145 @@
+"""Bit-exact functional model of the TensorDash hardware scheduler.
+
+Implements the sparse front-end interconnect of the paper (MICRO 2020):
+
+* Each of the N multiplier lanes has an (up to) 8-input multiplexer. For lane
+  ``i`` the selectable (step, lane) *movements*, in static priority order, are
+
+      (+0, i)                      -- dense schedule
+      (+1, i), (+2, i)             -- lookahead
+      (+1, i-1), (+1, i+1),
+      (+2, i-2), (+2, i+2),
+      (+1, i-3)                    -- lookaside (lane arithmetic mod N)
+
+  With ``lookahead=1`` (2-deep staging buffer) only the step<=1 options remain
+  (5 movements per multiplier, Fig. 19 of the paper).
+
+* A hierarchical combinational scheduler picks one movement per lane such that
+  every effectual (A, B) pair is consumed exactly once.  Lanes are grouped in
+  *levels* whose option sets are disjoint by construction; each level removes
+  its selections from the effectual-pair bit-vector ``Z`` before the next
+  level.  For N=16 / lookahead=2 the greedy grouping below reproduces the
+  paper's levels {0,5,10},{1,6,11},{2,7,12},{3,8,13},{4,9,14},{15}.
+
+Everything is pure JAX (jit/vmap/scan-compatible) so that the same code acts
+as (a) the cycle-accurate performance model used for every paper figure, and
+(b) the scheduled-form compression engine of paper section 3.6.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "connectivity",
+    "levels",
+    "make_schedule_step",
+    "drain_count",
+    "ScheduleStepResult",
+]
+
+# Lookaside movements (step, delta-lane) in the paper's priority order.
+_LOOKASIDE = ((1, -1), (1, +1), (2, -2), (2, +2), (1, -3))
+
+
+@functools.lru_cache(maxsize=None)
+def connectivity(n_lanes: int = 16, lookahead: int = 2):
+    """Movement tables.
+
+    Returns ``(steps, lanes)`` int32 numpy arrays of shape
+    ``[n_lanes, n_options]`` giving, for every lane, the (step, source-lane)
+    of each mux option in priority order.
+    """
+    opts = [(0, 0)]
+    opts += [(s, 0) for s in range(1, lookahead + 1)]
+    opts += [(s, d) for (s, d) in _LOOKASIDE if s <= lookahead]
+    steps = np.array([[s for (s, _) in opts] for _ in range(n_lanes)], np.int32)
+    lanes = np.array(
+        [[(i + d) % n_lanes for (_, d) in opts] for i in range(n_lanes)], np.int32
+    )
+    return steps, lanes
+
+
+@functools.lru_cache(maxsize=None)
+def levels(n_lanes: int = 16, lookahead: int = 2):
+    """Greedy conflict-free level assignment (tuple of tuples of lane ids).
+
+    Two lanes may share a level iff their (step, lane) option sets are
+    disjoint, which guarantees a valid schedule (each pair consumed once).
+    """
+    steps, lanes = connectivity(n_lanes, lookahead)
+    option_sets = [set(zip(steps[i].tolist(), lanes[i].tolist())) for i in range(n_lanes)]
+    lvls: list[list[int]] = []
+    for i in range(n_lanes):
+        for lvl in lvls:
+            if all(not (option_sets[i] & option_sets[j]) for j in lvl):
+                lvl.append(i)
+                break
+        else:
+            lvls.append([i])
+    return tuple(tuple(l) for l in lvls)
+
+
+class ScheduleStepResult(NamedTuple):
+    sel: jax.Array  # [n_lanes] int32 option index; == n_options means idle
+    z_out: jax.Array  # [depth, n_lanes] bool, remaining effectual pairs
+    advance: jax.Array  # int32 in [1, depth]: staging-buffer rows drained (AS)
+
+
+def drain_count(z_out: jax.Array) -> jax.Array:
+    """AS signal: number of leading fully-drained staging-buffer rows.
+
+    Row 0 is always drained after a schedule step (the dense option (+0, i)
+    is the top priority of lane i and no other lane can select it).
+    """
+    depth = z_out.shape[0]
+    empty = ~jnp.any(z_out, axis=-1)  # [depth]
+    adv = jnp.int32(1)
+    for r in range(1, depth):
+        adv = jnp.where(jnp.all(empty[: r + 1]), jnp.int32(r + 1), adv)
+    return adv
+
+
+def make_schedule_step(n_lanes: int = 16, lookahead: int = 2):
+    """Build the single-cycle scheduler function.
+
+    The returned function maps ``Z: [lookahead+1, n_lanes] bool`` (effectual
+    pair mask of the staging-buffer window; True = pair still to be consumed)
+    to a :class:`ScheduleStepResult`.  It is trace-compatible (jit / vmap /
+    scan) and purely combinational, mirroring the single-cycle hardware
+    scheduler of the paper.
+    """
+    steps_np, lanes_np = connectivity(n_lanes, lookahead)
+    lvls = levels(n_lanes, lookahead)
+    n_options = steps_np.shape[1]
+    steps_t = jnp.asarray(steps_np)
+    lanes_t = jnp.asarray(lanes_np)
+
+    def schedule_step(z: jax.Array) -> ScheduleStepResult:
+        assert z.shape == (lookahead + 1, n_lanes), z.shape
+        sel = jnp.full((n_lanes,), n_options, dtype=jnp.int32)
+        for lvl in lvls:
+            li = jnp.asarray(lvl, dtype=jnp.int32)
+            # [L, n_options] availability of each option for the level's lanes
+            avail = z[steps_t[li], lanes_t[li]]
+            pick = jnp.argmax(avail, axis=-1).astype(jnp.int32)  # first True
+            valid = jnp.any(avail, axis=-1)
+            sel = sel.at[li].set(jnp.where(valid, pick, n_options))
+            chosen_step = steps_t[li, pick]
+            chosen_lane = lanes_t[li, pick]
+            # Remove selections from Z (disjoint within a level by design).
+            z = z.at[chosen_step, chosen_lane].set(
+                jnp.where(valid, False, z[chosen_step, chosen_lane])
+            )
+        return ScheduleStepResult(sel=sel, z_out=z, advance=drain_count(z))
+
+    schedule_step.n_lanes = n_lanes
+    schedule_step.lookahead = lookahead
+    schedule_step.n_options = n_options
+    schedule_step.steps_table = steps_np
+    schedule_step.lanes_table = lanes_np
+    return schedule_step

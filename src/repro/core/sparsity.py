@@ -1,0 +1,126 @@
+"""Sparsity measurement & instrumentation utilities.
+
+These feed the TensorDash perf model with *measured* operand sparsity from
+live JAX models, and implement the block-granularity analysis needed for the
+TPU adaptation (the MXU works on tiles, not lanes — element sparsity below
+block granularity saves energy but not time on TPU; see DESIGN.md §2).
+
+Gradient taps use the zero-probe trick: adding a zeros-valued probe at an
+activation makes ``d loss / d probe`` exactly the output-activation gradient
+``G_O`` of the paper's Eq. (2)/(3), with no custom-vjp side channels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SparsityStats",
+    "measure",
+    "merge_stats",
+    "block_mask",
+    "block_density",
+    "lane_streams",
+    "apply_probes",
+    "grad_sparsity",
+]
+
+
+class SparsityStats(NamedTuple):
+    """Pytree-compatible running sparsity statistics for one tensor family."""
+
+    zeros: jax.Array  # float32 scalar: number of zero elements
+    total: jax.Array  # float32 scalar: number of elements
+    block_zeros: jax.Array  # float32 scalar: number of all-zero blocks
+    block_total: jax.Array  # float32 scalar: number of blocks
+
+    @property
+    def fraction(self):
+        return self.zeros / jnp.maximum(self.total, 1.0)
+
+    @property
+    def block_fraction(self):
+        return self.block_zeros / jnp.maximum(self.block_total, 1.0)
+
+
+def block_mask(x: jax.Array, block: int = 16, axis: int = -1) -> jax.Array:
+    """True where a ``block``-wide group along ``axis`` is entirely zero.
+
+    The trailing partial block (if any) is padded with zeros, i.e. counted
+    as zero-extended, matching the 16x16 group layout of paper section 3.4.
+    """
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    pad = (-n) % block
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    new_shape = x.shape[:axis] + (x.shape[axis] // block, block) + x.shape[axis + 1 :]
+    xb = x.reshape(new_shape)
+    return jnp.all(xb == 0, axis=axis + 1)
+
+
+def block_density(x: jax.Array, block: int = 16, axis: int = -1) -> jax.Array:
+    bm = block_mask(x, block=block, axis=axis)
+    return 1.0 - jnp.mean(bm.astype(jnp.float32))
+
+
+def measure(x: jax.Array, block: int = 16) -> SparsityStats:
+    z = jnp.sum((x == 0).astype(jnp.float32))
+    bm = block_mask(x, block=block, axis=-1)
+    return SparsityStats(
+        zeros=z,
+        total=jnp.asarray(float(x.size), jnp.float32),
+        block_zeros=jnp.sum(bm.astype(jnp.float32)),
+        block_total=jnp.asarray(float(bm.size), jnp.float32),
+    )
+
+
+def merge_stats(stats: list[SparsityStats]) -> SparsityStats:
+    return SparsityStats(
+        zeros=sum(s.zeros for s in stats),
+        total=sum(s.total for s in stats),
+        block_zeros=sum(s.block_zeros for s in stats),
+        block_total=sum(s.block_total for s in stats),
+    )
+
+
+def lane_streams(x: jax.Array, n_lanes: int = 16) -> jax.Array:
+    """Reshape a tensor into ``[streams, T, n_lanes]`` PE input streams.
+
+    The reduction (last) dimension becomes the lane-major stream, matching
+    the channel-major 16-value blocks of the paper's tensor layout (§3.4).
+    """
+    red = x.shape[-1]
+    pad = (-red) % n_lanes
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    t = x.shape[-1] // n_lanes
+    flat = x.reshape(-1, t, n_lanes)
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Gradient taps (zero-probe trick)
+# ---------------------------------------------------------------------------
+
+
+def apply_probes(x: jax.Array, probes: dict | None, name: str) -> jax.Array:
+    """Add a zero probe at a tap point: no-op in the primal, but
+    ``jax.grad`` w.r.t. ``probes[name]`` yields the cotangent G_O exactly."""
+    if probes is not None and name in probes:
+        x = x + probes[name]
+    return x
+
+
+def grad_sparsity(loss_fn, params, probes: dict, *args, **kwargs) -> dict:
+    """Zero fraction of the gradient arriving at each probe point.
+
+    ``loss_fn(params, probes, *args) -> scalar`` must route ``probes``
+    through :func:`apply_probes`.
+    """
+    gprobes = jax.grad(lambda pr: loss_fn(params, pr, *args, **kwargs))(probes)
+    return {k: measure(g) for k, g in gprobes.items()}

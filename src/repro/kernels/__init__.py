@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU)."""
+from repro.kernels.tensordash_spmm import plan_blocks, tensordash_matmul, tensordash_matmul_planned
+from repro.kernels.block_mask import block_zero_mask

@@ -1,0 +1,41 @@
+"""Pallas kernel: on-device block zero-mask (the TensorDash front-end
+scheduler's Z-vector at MXU-block granularity).
+
+The paper's staging buffer produces a 3x16 zero bit-vector per cycle;
+at TPU granularity the analogue is a [M/bm, K/bk] boolean block map produced
+*on device* as data streams out of the previous op (the backside-scheduler
+placement of paper §3.7) so the consuming ``tensordash_spmm`` kernel's plan
+needs no extra HBM pass over the values.
+
+Grid: one program per (bm x bk) block; each reduces its VMEM tile to a
+single ``any(x != 0)`` predicate (stored as int8 for layout friendliness).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["block_zero_mask"]
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[0, 0] = jnp.any(x_ref[...] != 0).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def block_zero_mask(x: jax.Array, *, bm: int = 128, bk: int = 512, interpret: bool = False):
+    """[M, K] -> int8 [M/bm, K/bk]; 1 where the block has any non-zero."""
+    m, k = x.shape
+    assert m % bm == 0 and k % bk == 0, (x.shape, bm, bk)
+    mb, kb = m // bm, k // bk
+    return pl.pallas_call(
+        _kernel,
+        grid=(mb, kb),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mb, kb), jnp.int8),
+        interpret=interpret,
+    )(x)

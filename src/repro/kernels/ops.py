@@ -1,0 +1,75 @@
+"""Jit'd public wrappers around the TensorDash kernels.
+
+``mode`` selects the execution path so the same model code serves every
+runtime in this repo:
+
+* ``"dense"``      — plain XLA matmul (used by the multi-pod dry-run: the
+                     container's CPU backend cannot lower TPU Pallas).
+* ``"pallas"``     — the TPU kernel (target hardware).
+* ``"interpret"``  — the TPU kernel executed in Pallas interpret mode on CPU
+                     (correctness validation; used by the kernel test sweeps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.tensordash_spmm import (
+    plan_blocks,
+    tensordash_matmul,
+    tensordash_matmul_planned,
+)
+
+__all__ = [
+    "matmul",
+    "sparse_ffn",
+    "plan_blocks",
+    "tensordash_matmul",
+    "tensordash_matmul_planned",
+]
+
+
+def matmul(a, b, *, mode: str = "dense", bm: int = 128, bk: int = 512, bn: int = 128):
+    """``a @ b`` with the TensorDash block-sparse path when requested."""
+    if mode == "dense":
+        return ref.matmul_ref(a, b)
+    if mode in ("pallas", "interpret"):
+        return tensordash_matmul(
+            a, b, bm=bm, bk=bk, bn=bn, interpret=(mode == "interpret")
+        )
+    raise ValueError(f"unknown mode: {mode}")
+
+
+def sparse_ffn(
+    x,
+    w1,
+    w2,
+    *,
+    activation: str = "relu",
+    mode: str = "dense",
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 128,
+):
+    """FFN whose second matmul exploits the dynamic sparsity the first one's
+    activation produced — the framework's main consumer of the kernel.
+
+    ReLU-family activations make ``h`` dynamically sparse exactly the way the
+    paper's Eq. (1) activations are; the kernel converts that into skipped
+    MXU blocks.  Token dimension(s) of ``x`` are flattened to rows.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    h = jnp.dot(x2, w1, preferred_element_type=jnp.float32)
+    if activation == "relu":
+        h = jnp.maximum(h, 0.0)
+    elif activation == "squared_relu":
+        h = jnp.square(jnp.maximum(h, 0.0))
+    else:
+        raise ValueError(activation)
+    h = h.astype(x.dtype)
+    out = matmul(h, w2, mode=mode, bm=bm, bk=bk, bn=bn)
+    return out.reshape(*lead, w2.shape[-1])

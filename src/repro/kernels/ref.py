@@ -1,0 +1,40 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(a, b):
+    """Dense oracle — TensorDash must be bit-meaningfully identical
+    (it only elides multiplications where one operand block is all zero)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def plan_blocks_ref(a: np.ndarray, bm: int, bk: int):
+    """Reference (loopy numpy) block plan for property tests."""
+    m, k = a.shape
+    mb, kb = m // bm, k // bk
+    nnz = np.zeros(mb, np.int32)
+    idx = np.zeros((mb, kb), np.int32)
+    for mi in range(mb):
+        eff = [
+            ki
+            for ki in range(kb)
+            if np.any(a[mi * bm : (mi + 1) * bm, ki * bk : (ki + 1) * bk] != 0)
+        ]
+        nnz[mi] = len(eff)
+        row = eff + [eff[-1] if eff else 0] * (kb - len(eff))
+        idx[mi] = row
+    return nnz, idx
+
+
+def sparse_ffn_ref(x, w1, w2, activation="relu"):
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    if activation == "relu":
+        h = jnp.maximum(h, 0.0)
+    elif activation == "squared_relu":
+        h = jnp.square(jnp.maximum(h, 0.0))
+    else:
+        raise ValueError(activation)
+    return jnp.dot(h.astype(x.dtype), w2, preferred_element_type=jnp.float32).astype(x.dtype)

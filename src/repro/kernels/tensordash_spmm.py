@@ -1,0 +1,167 @@
+"""TensorDash on TPU: dynamic block-sparse matmul Pallas kernel.
+
+This is the MXU-granularity adaptation of the paper's PE (DESIGN.md §2).
+The element-level mechanism — *compact the effectual work stream at run time
+with a restricted-movement interconnect* — becomes, at TPU block granularity:
+
+1. ``plan_blocks`` (the "hardware scheduler"): from the sparse operand's
+   runtime values, build per-M-block-row a *compacted* list of effectual
+   K-block indices plus a count.  This is pure data movement of metadata
+   (a [Mb, Kb] bool mask -> stable argsort), the analogue of the Z-vector and
+   priority encoders.
+
+2. The Pallas kernel (the "sparse interconnect"): the K grid dimension walks
+   the compacted index list via scalar-prefetch index maps — the multiplexer
+   that advances effectual blocks into the slots of ineffectual ones
+   (lookahead across the whole K stream; unlike the 3-deep staging buffer the
+   TPU's VMEM pipeline depth allows unbounded lookahead *within* a block row,
+   but no lookaside across rows — block rows are independent, which is what
+   keeps the interconnect "sparse" in the paper's sense).
+
+   Grid steps beyond the effectual count re-reference the last effectual
+   block: Pallas elides the HBM->VMEM copy for a revisited block and
+   ``pl.when`` gates the MXU work, the analogue of power-gating + advancing
+   work in time.
+
+The kernel computes ``C[M, N] = A[M, K] @ B[K, N]`` where ``A`` is the
+dynamically-sparse operand stream (activations / gradients in the paper's
+three training convolutions).  Numerical fidelity is untouched: only
+multiplications by all-zero blocks are elided.
+
+VMEM budget (defaults, fp32): A block 128x512 (256 KB) + B block 512x128
+(256 KB) + C block 128x128 (64 KB) + fp32 accumulator (64 KB) < 1 MB, well
+inside the ~16 MB VMEM of a TPU core; all dims are multiples of the MXU's
+128 and the fp32 sublane tile (8, 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["plan_blocks", "tensordash_matmul_planned", "tensordash_matmul"]
+
+
+def plan_blocks(a: jax.Array, bm: int, bk: int):
+    """Runtime block scheduler: compacted effectual K-block lists.
+
+    Returns ``(nnz [Mb] int32, idx [Mb, Kb] int32)`` where ``idx[m, :nnz[m]]``
+    are the K-block indices (ascending) whose ``bm x bk`` block of ``a`` is
+    not entirely zero; the tail repeats the last effectual index (or 0) so
+    skipped grid steps revisit a resident block.
+    """
+    m, k = a.shape
+    assert m % bm == 0 and k % bk == 0, (a.shape, bm, bk)
+    mb, kb = m // bm, k // bk
+    blocks = a.reshape(mb, bm, kb, bk)
+    nonzero = jnp.any(blocks != 0, axis=(1, 3))  # [Mb, Kb]
+    nnz = jnp.sum(nonzero, axis=1).astype(jnp.int32)  # [Mb]
+    # stable sort: effectual block ids first, in ascending k order
+    order = jnp.argsort(~nonzero, axis=1, stable=True).astype(jnp.int32)
+    # tail: repeat the last effectual index so revisits hit a resident block
+    pos = jnp.arange(kb, dtype=jnp.int32)[None, :]
+    last = jnp.maximum(nnz - 1, 0)[:, None]
+    idx = jnp.where(pos < jnp.maximum(nnz, 1)[:, None], order, jnp.take_along_axis(order, last, axis=1))
+    return nnz, idx
+
+
+def _kernel(nnz_ref, idx_ref, a_ref, b_ref, o_ref, acc_ref, *, n_kb: int):
+    m_i = pl.program_id(0)
+    k_i = pl.program_id(2)
+
+    @pl.when(k_i == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Effectual step: accumulate this block's contribution on the MXU.
+    @pl.when(k_i < nnz_ref[m_i])
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k_i == n_kb - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "interpret", "out_dtype"),
+)
+def tensordash_matmul_planned(
+    nnz: jax.Array,
+    idx: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+):
+    """Block-sparse ``a @ b`` given a precomputed block plan (see
+    :func:`plan_blocks`).  Splitting planning from execution lets the plan be
+    produced by the *backside scheduler* (paper §3.7): e.g. the op that wrote
+    ``a`` emits the plan alongside, so consumers skip the replanning pass."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, bm, bk, bn)
+    mb, kb, nb = m // bm, k // bk, n // bn
+    out_dtype = out_dtype or a.dtype
+
+    grid = (mb, nb, kb)
+
+    def a_map(m_i, n_i, k_i, nnz_ref, idx_ref):
+        del n_i, nnz_ref
+        return (m_i, idx_ref[m_i, k_i])
+
+    def b_map(m_i, n_i, k_i, nnz_ref, idx_ref):
+        del nnz_ref
+        return (idx_ref[m_i, k_i], n_i)
+
+    def o_map(m_i, n_i, k_i, nnz_ref, idx_ref):
+        del k_i, nnz_ref, idx_ref
+        return (m_i, n_i)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), a_map),
+            pl.BlockSpec((bk, bn), b_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_kb=kb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(nnz, idx, a, b)
+
+
+def tensordash_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+):
+    """Dynamic block-sparse ``a @ b``: plan at run time, then execute."""
+    nnz, idx = plan_blocks(a, bm, bk)
+    return tensordash_matmul_planned(
+        nnz, idx, a, b, bm=bm, bk=bk, bn=bn, interpret=interpret, out_dtype=out_dtype
+    )

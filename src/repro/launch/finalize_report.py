@@ -1,0 +1,68 @@
+"""Assemble the EXPERIMENTS.md appendix from the dry-run result snapshots.
+
+    PYTHONPATH=src python -m repro.launch.finalize_report
+
+Inputs:
+  results/dryrun_baseline.json  - complete single-pod baseline (32 cells)
+  results/dryrun.json           - current state: post-optimization values for
+                                  re-measured cells + the multi-pod pass
+"""
+from __future__ import annotations
+
+import json
+
+from repro.launch.report import dryrun_table, fmt_s, roofline_table
+
+MARK = "## §Appendix: dry-run & roofline tables"
+
+
+def main():
+    base = json.load(open("results/dryrun_baseline.json"))
+    cur = json.load(open("results/dryrun.json"))
+
+    out = [MARK, ""]
+    out.append("### Roofline, single-pod 16x16 / 256 chips — framework baseline (all cells)\n")
+    out.append(roofline_table(base, "16x16"))
+
+    # post-optimization diffs
+    out.append("\n### Post-optimization cells (re-measured after §Perf iterations 3-5)\n")
+    out.append("| cell | compute | collective | useful ratio |")
+    out.append("|---|---|---|---|")
+    for k in sorted(cur):
+        if cur[k].get("mesh") != "16x16" or not cur[k].get("ok") or k not in base:
+            continue
+        b, a = base[k]["roofline"], cur[k]["roofline"]
+        if abs(a["flops"] - b["flops"]) < 1e-6 and abs(a["coll_bytes"] - b["coll_bytes"]) < 1e-6:
+            continue
+        ub = base[k].get("useful_flops_ratio")
+        ua = cur[k].get("useful_flops_ratio")
+        out.append(
+            f"| {k.rsplit('|',1)[0].replace('|',' x ')} "
+            f"| {fmt_s(b['compute_s'])} -> {fmt_s(a['compute_s'])} "
+            f"| {fmt_s(b['collective_s'])} -> {fmt_s(a['collective_s'])} "
+            f"| {ub and round(ub,3)} -> {ua and round(ua,3)} |"
+        )
+
+    # multi-pod pass
+    ok = sum(1 for r in cur.values() if r.get("mesh") == "2x16x16" and r.get("ok"))
+    tot = sum(1 for r in cur.values() if r.get("mesh") == "2x16x16")
+    out.append(f"\n### Multi-pod pass, 2x16x16 / 512 chips ({ok}/{tot} cells compile)\n")
+    out.append(
+        "Proves the `pod` axis shards every program (lower + compile succeeds"
+        " per cell; scan-mode compiles — per-layer roofline extrapolation is"
+        " single-pod only, per the assignment).\n"
+    )
+    out.append(dryrun_table(cur, "2x16x16"))
+
+    out.append("\n### Dry-run detail, single-pod (memory analysis per device)\n")
+    out.append(dryrun_table(base, "16x16"))
+
+    text = open("EXPERIMENTS.md").read()
+    head = text.split(MARK)[0]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(head + "\n".join(out) + "\n")
+    print(f"appendix written ({ok}/{tot} multipod cells ok)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Render results/dryrun.json into the EXPERIMENTS.md §Dry-run / §Roofline
+tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--json results/dryrun.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def dryrun_table(results: dict, mesh: str) -> str:
+    rows = [
+        "| arch | shape | kind | compile | args/dev | temp/dev | FLOPs (global) | HBM bytes | coll bytes |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(results):
+        r = results[key]
+        if r.get("mesh") != mesh:
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | - | FAILED: {r.get('error','')[:60]} | | | | | |")
+            continue
+        mem = r.get("mem", {})
+        chips = r["chips"]
+        rf = r["roofline"]
+        rows.append(
+            "| {arch} | {shape} | {kind} | {c}s | {args} | {temp} | {fl:.3e} | {hb} | {cb} |".format(
+                arch=r["arch"], shape=r["shape"], kind=r["kind"], c=r["compile_s"],
+                args=fmt_bytes((mem.get("argument_bytes") or 0)),
+                temp=fmt_bytes((mem.get("temp_bytes") or 0)),
+                fl=rf["flops"], hb=fmt_bytes(rf["hbm_bytes"] / chips) + "/dev",
+                cb=fmt_bytes(rf["coll_bytes"] / chips) + "/dev",
+            )
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(results: dict, mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | compute | memory | memory(adj) | collective | dominant | MODEL_FLOPS | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(results):
+        r = results[key]
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        dom = rf["dominant"]
+        rows.append(
+            "| {arch} | {shape} | {c} | {m} | {ma} | {co} | {dom} | {mf:.2e} | {ur} |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=fmt_s(rf["compute_s"]), m=fmt_s(rf["memory_s"]),
+                ma=fmt_s(r.get("memory_adj_s")), co=fmt_s(rf["collective_s"]),
+                dom=dom, mf=r["model_flops"],
+                ur=f"{r['useful_flops_ratio']:.3f}" if r.get("useful_flops_ratio") else "-",
+            )
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    for mesh in ("16x16", "2x16x16"):
+        if any(r.get("mesh") == mesh for r in results.values()):
+            print(f"\n### Dry-run ({mesh})\n")
+            print(dryrun_table(results, mesh))
+            print(f"\n### Roofline ({mesh})\n")
+            print(roofline_table(results, mesh))
+    ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{ok}/{len(results)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e hardware constants (per chip):
+  peak bf16 compute 197 TFLOP/s, HBM bandwidth 819 GB/s, ICI ~50 GB/s/link.
+
+  compute term    = HLO_FLOPs / (chips * peak)
+  memory term     = HLO_bytes / (chips * hbm_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` provides flops/bytes; collective bytes are parsed from
+the HLO text by summing *operand* sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (operand dtypes+shapes are
+inlined in the op line, including tuple-sharded variadic ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineTerms"]
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    chips: int
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# a type like bf16[8,128]{1,0} or f32[]
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+(?:e\d+m\d+\w*)?|pred)\[([\d,]*)\]")
+# the collective op-name use site: preceded by whitespace (not a %value name)
+_OP_RE = re.compile(
+    r"(?<=\s)(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum of *operand* (shard) bytes per collective kind.
+
+    HLO no longer inlines operand types, so the result-type region (before
+    the op name) is parsed and converted to operand bytes per kind:
+    all-gather result = operand * group, reduce-scatter result = operand /
+    group, everything else result = operand.  ``-done`` halves of async pairs
+    are skipped; for ``-start`` tuples the last shape is the destination.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind, suffix = m.group(1), m.group(2)
+        if suffix == "-done":
+            continue
+        result_region = line[: m.start()]
+        if "=" in result_region:
+            result_region = result_region.split("=", 1)[1]
+        shapes = _SHAPE_RE.findall(result_region)
+        if not shapes:
+            continue
+        if suffix == "-start":
+            shapes = shapes[-1:]
+        total = sum(_bytes_of(d, s) for d, s in shapes)
+        g = _group_size(line)
+        if kind == "all-gather":
+            total //= max(g, 1)
+        elif kind == "reduce-scatter":
+            total *= g
+        out[kind] += total
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / (self.chips * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        vals = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def roofline_terms(compiled, chips: int) -> RooflineTerms:
+    """Extract the three terms from a compiled executable.
+
+    ``cost_analysis()`` and the HLO text describe the *per-device* SPMD
+    program; quantities are scaled by ``chips`` so the stored numbers are
+    global and the term formulas divide back (term = per-device work /
+    per-chip rate).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0)) * chips
+    hbm = float(ca.get("bytes accessed", 0.0)) * chips
+    coll = sum(collective_bytes(compiled.as_text()).values()) * chips
+    return RooflineTerms(flops=flops, hbm_bytes=hbm, coll_bytes=float(coll), chips=chips)

@@ -1,0 +1,96 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+        --steps 20 --ckpt-dir /tmp/ckpt
+
+On real hardware this runs the full config on the production mesh (one
+process per host, jax.distributed); on this CPU container ``--smoke`` runs
+the reduced config end-to-end with the identical code path: mesh, sharded
+params, checkpointing, preemption guard, straggler deadline, TensorDash
+sparsity projection.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.manager import PreemptionGuard, latest_step, restore, save
+from repro.configs import get_config, reduce_config
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import model as M
+from repro.models.common import init_params
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.parallel.sharding import param_pspecs
+from repro.train.step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--step-deadline", type=float, default=300.0,
+                    help="straggler mitigation: abort+checkpoint if a step exceeds this")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_config(cfg)
+        mesh = make_local_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cfg = dataclasses.replace(cfg, remat=not args.smoke)
+
+    specs = M.param_specs(cfg)
+    pspecs = param_pspecs(specs, mesh)
+    shardings = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs)
+    with mesh:
+        params = jax.jit(
+            lambda k: init_params(specs, k), out_shardings=shardings
+        )(jax.random.PRNGKey(0))
+        opt = init_opt_state(params)
+        data = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
+        ocfg = OptConfig(total_steps=max(args.steps, 100))
+        step_fn = jax.jit(make_train_step(cfg, ocfg, mesh, microbatches=args.microbatches))
+        guard = PreemptionGuard()
+
+        start = 0
+        if args.ckpt_dir and (s := latest_step(args.ckpt_dir)) is not None:
+            state = restore(args.ckpt_dir, s, {"params": params, "opt": opt})
+            params, opt, start = state["params"], state["opt"], s
+            print(f"resumed at step {s}")
+
+        for i in range(start, args.steps):
+            t0 = time.time()
+            params, opt, m = step_fn(params, opt, data.batch_at(i))
+            m = jax.device_get(m)
+            dt = time.time() - t0
+            if dt > args.step_deadline:
+                print(f"step {i} exceeded deadline ({dt:.0f}s): checkpoint + abort")
+                if args.ckpt_dir:
+                    save(args.ckpt_dir, i + 1, {"params": params, "opt": opt})
+                return
+            if (i + 1) % 5 == 0 or i == start:
+                print(f"step {i+1:5d} loss {float(m['loss']):.4f} gnorm {float(m['grad_norm']):.2f} {dt:.2f}s")
+            if args.ckpt_dir and ((i + 1) % args.ckpt_every == 0 or guard.should_save):
+                save(args.ckpt_dir, i + 1, {"params": params, "opt": opt})
+                if guard.should_save:
+                    print("preemption: saved, exiting")
+                    return
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import attention, common, hybrid, mla, model, moe, ssm, transformer

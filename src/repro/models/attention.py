@@ -1,0 +1,263 @@
+"""GQA attention with the variants needed by the assigned architectures:
+
+RoPE / M-RoPE (Qwen2-VL), qk-norm (Qwen3), attention-logit softcap and
+local/global alternation (Gemma-2), sliding windows, and a decode path over a
+pre-filled KV cache.  Query-chunked computation keeps the score tensor at
+``[B, H, chunk, S]`` so 32k-token prefill fits per-device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    Spec,
+    apply_rope,
+    causal_mask,
+    mrope_tables,
+    rms_norm,
+    rotary_embedding,
+    softcap,
+)
+from repro.parallel.sharding import DP, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    attn_softcap: float | None = None
+    sliding_window: int | None = None
+    mrope_sections: tuple | None = None
+    q_chunk: int = 1024
+    unroll: bool = False
+    kv_quant: bool = False  # int8 KV cache (decode memory term, §Perf 7)
+
+
+def attention_specs(cfg: AttnConfig) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": Spec((d, h * hd), ("embed", "heads")),
+        "wk": Spec((d, kh * hd), ("embed", "kv_heads")),
+        "wv": Spec((d, kh * hd), ("embed", "kv_heads")),
+        "wo": Spec((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = Spec((hd,), (None,), init="ones")
+        specs["k_norm"] = Spec((hd,), (None,), init="ones")
+    return specs
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, S, KVH, D]  (bf16, or int8 when quantized)
+    v: jax.Array  # [B, S, KVH, D]
+    k_scale: jax.Array | None = None  # [B, S, KVH, 1] f32 per-row scales
+    v_scale: jax.Array | None = None
+
+
+def _kv_quant_rows(x):
+    """Per-(token, head) symmetric int8: [.., D] -> (int8, f32 scale)."""
+    s = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _kv_dequant(q, s, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def _rope_tables(cfg: AttnConfig, positions):
+    """positions: [S] (LM) or [B, 3, S] (M-RoPE)."""
+    if cfg.mrope_sections is not None:
+        return mrope_tables(positions, cfg.head_dim, cfg.mrope_sections, cfg.rope_theta)
+    cos, sin = rotary_embedding(positions, cfg.head_dim, cfg.rope_theta)
+    return cos[..., None, :], sin[..., None, :]  # broadcast over heads
+
+
+def _project_qkv(params, cfg: AttnConfig, x, positions, mesh=None):
+    b, s, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = constrain((x @ params["wq"]).reshape(b, s, h, hd), mesh, (DP, None, "model", None))
+    k = constrain((x @ params["wk"]).reshape(b, s, kh, hd), mesh, (DP, None, "model", None))
+    v = constrain((x @ params["wv"]).reshape(b, s, kh, hd), mesh, (DP, None, "model", None))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    cos, sin = _rope_tables(cfg, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _attend(cfg: AttnConfig, q, k, v, q_pos, k_pos, window):
+    """q [B,T,H,D]; k,v [B,S,KVH,D]; q_pos [T]; k_pos [S] -> [B,T,H,D]."""
+    b, t, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = hd ** -0.5
+    qg = q.reshape(b, t, kh, g, hd)
+    scores = jnp.einsum(
+        "btkgd,bskd->bkgts", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    mask = causal_mask(q_pos, k_pos, window)  # [T, S]
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, t, h, hd)
+
+
+def attend_chunked(cfg: AttnConfig, q, k, v, q_pos, k_pos, *, window=None,
+                   static_window=None, static_causal: bool = False):
+    """Query-chunked attention: peak score memory B*H*chunk*S.
+
+    ``static_causal`` (measurement/unrolled mode, and what a production
+    splash-attention kernel does on TPU): each query chunk attends only to
+    keys inside its causal frontier — and, with a *static* sliding window,
+    only to the trailing ``window + chunk`` keys — via static slices, so
+    skipped KV blocks cost neither FLOPs nor bytes.
+    """
+    b, s, h, hd = q.shape
+    c = cfg.q_chunk
+    if s <= c or s % c != 0:
+        return _attend(cfg, q, k, v, q_pos, k_pos, window)
+    nc = s // c
+    if static_causal:
+        outs = []
+        for i in range(nc):
+            end = (i + 1) * c
+            start = 0 if static_window is None else max(0, end - c - static_window)
+            outs.append(
+                _attend(
+                    cfg,
+                    q[:, i * c : end],
+                    k[:, start:end],
+                    v[:, start:end],
+                    q_pos[i * c : end],
+                    k_pos[start:end],
+                    static_window,
+                )
+            )
+        return jnp.concatenate(outs, axis=1)
+    qc = q.reshape(b, nc, c, h, hd).swapaxes(0, 1)  # [nc, B, c, H, D]
+    pc = q_pos.reshape(nc, c)
+
+    def body(_, inp):
+        qi, pi = inp
+        return None, _attend(cfg, qi, k, v, pi, k_pos, window)
+
+    _, out = jax.lax.scan(body, None, (qc, pc), unroll=nc if cfg.unroll else 1)
+    return out.swapaxes(0, 1).reshape(b, s, h, hd)
+
+
+def attention_fwd(
+    params,
+    cfg: AttnConfig,
+    x,
+    positions,
+    *,
+    is_global=True,
+    return_cache: bool = False,
+    mesh=None,
+):
+    """Training / prefill self-attention.  ``is_global`` may be a traced bool
+    (scanned per-layer flag for Gemma-2 local/global alternation): the
+    sliding-window mask is applied only on local layers."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions, mesh)
+    pos1d = positions if positions.ndim == 1 else jnp.arange(s)
+    static_flag = isinstance(is_global, (bool, int))
+    if cfg.sliding_window is None:
+        out = attend_chunked(cfg, q, k, v, pos1d, pos1d, static_causal=cfg.unroll)
+    elif static_flag:
+        sw = None if is_global else cfg.sliding_window
+        out = attend_chunked(
+            cfg, q, k, v, pos1d, pos1d, static_window=sw, static_causal=cfg.unroll
+        )
+    else:
+        # window as data: global layers get an unbounded window
+        window = jnp.where(is_global, jnp.int32(2**30), jnp.int32(cfg.sliding_window))
+        out = attend_chunked(cfg, q, k, v, pos1d, pos1d, window=window)
+    y = out.reshape(b, s, -1) @ params["wo"]
+    if return_cache:
+        if cfg.kv_quant:
+            kq, ks = _kv_quant_rows(k)
+            vq, vs = _kv_quant_rows(v)
+            return y, KVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+        return y, KVCache(k=k, v=v)
+    return y
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        sshape = shape[:-1] + (1,)
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(sshape, jnp.float32), v_scale=jnp.zeros(sshape, jnp.float32),
+        )
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attention_decode(
+    params,
+    cfg: AttnConfig,
+    x,
+    cache: KVCache,
+    pos,
+    *,
+    is_global=True,
+    mesh=None,
+):
+    """One-token decode.  ``x [B, 1, d]``, cache pre-filled up to ``pos``
+    (exclusive); the new token is written at index ``pos``.  Returns
+    ``(y [B,1,d], new_cache)``."""
+    b = x.shape[0]
+    s_max = cache.k.shape[1]
+    positions = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32).reshape(-1), (1,)
+        )[None, None, :].repeat(3, axis=1).repeat(b, axis=0)  # [B,3,1] text-mode
+    q, k, v = _project_qkv(params, cfg, x, positions, mesh)
+    if cfg.kv_quant:
+        kq, ks = _kv_quant_rows(k)
+        vq, vs = _kv_quant_rows(v)
+        new_cache = KVCache(
+            k=jax.lax.dynamic_update_slice(cache.k, kq, (0, pos, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache.v, vq, (0, pos, 0, 0)),
+            k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, pos, 0, 0)),
+            v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, pos, 0, 0)),
+        )
+        k_cache = _kv_dequant(new_cache.k, new_cache.k_scale, x.dtype)
+        v_cache = _kv_dequant(new_cache.v, new_cache.v_scale, x.dtype)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0))
+    q_pos = jnp.asarray(pos, jnp.int32).reshape(1)
+    sw = cfg.sliding_window
+    if sw is not None and isinstance(is_global, (bool, int)) and not is_global and sw < s_max:
+        # static sliding window: read only the trailing `window` cache slots
+        kh, hd = cache.k.shape[2], cache.k.shape[3]
+        start = jnp.clip(pos - sw + 1, 0, s_max - sw)
+        k_win = jax.lax.dynamic_slice(k_cache, (0, start, 0, 0), (b, sw, kh, hd))
+        v_win = jax.lax.dynamic_slice(v_cache, (0, start, 0, 0), (b, sw, kh, hd))
+        out = _attend(cfg, q, k_win, v_win, q_pos, start + jnp.arange(sw), sw)
+    else:
+        k_pos = jnp.arange(s_max)
+        if sw is None:
+            window = None
+        else:
+            window = jnp.where(is_global, jnp.int32(2**30), jnp.int32(sw))
+        out = _attend(cfg, q, k_cache, v_cache, q_pos, k_pos, window)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    if cfg.kv_quant:
+        return y, new_cache
+    return y, KVCache(k=k_cache, v=v_cache)

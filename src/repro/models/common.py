@@ -1,0 +1,158 @@
+"""Param-spec system and shared layer primitives.
+
+Models declare their parameters as a nested dict of :class:`Spec` (shape +
+*logical axes* + initializer).  From one declaration the framework derives:
+
+* materialized parameters (smoke tests / real training),
+* abstract ``ShapeDtypeStruct`` trees (multi-pod dry-run — no allocation),
+* ``PartitionSpec`` trees via the logical-axis rules in
+  :mod:`repro.parallel.sharding`.
+
+This single-source-of-truth prevents init/sharding drift across the 10
+assigned architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim; len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | embed | scaled
+    scale: float | None = None
+    dtype: Any = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec_tree(tree) -> bool:
+    return any(isinstance(l, Spec) for l in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, Spec)))
+
+
+def _fan_in(shape: tuple) -> int:
+    # convention: last dim is the output features; everything else is fan-in
+    if len(shape) == 1:
+        return shape[0]
+    return max(1, math.prod(shape[:-1]) // (shape[0] if len(shape) > 2 else 1))
+
+
+def init_params(specs, key, dtype=DEFAULT_DTYPE):
+    """Materialize a spec tree into a parameter pytree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dt)
+        elif spec.init == "embed":
+            arr = (jax.random.normal(k, spec.shape, jnp.float32)).astype(dt)
+        elif spec.init == "normal":
+            std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(_fan_in(spec.shape))
+            arr = (std * jax.random.normal(k, spec.shape, jnp.float32)).astype(dt)
+        elif spec.init == "scaled":
+            std = spec.scale if spec.scale is not None else 0.02
+            arr = (std * jax.random.normal(k, spec.shape, jnp.float32)).astype(dt)
+        else:
+            raise ValueError(spec.init)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, dtype=DEFAULT_DTYPE):
+    """ShapeDtypeStruct tree — used by the dry-run (no device allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+# ---------------------------------------------------------------------------
+# Layer primitives (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6, *, zero_centered: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if zero_centered:  # gemma-style (1 + w)
+        w = 1.0 + w
+    return (x * w).astype(dt)
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {"silu": silu, "gelu": gelu, "relu": lambda x: jnp.maximum(x, 0)}
+
+
+def rotary_embedding(positions, dim: int, theta: float = 1e4):
+    """Standard RoPE tables.  positions [...]; returns cos/sin [..., dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin broadcastable to [..., S, 1, D/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_tables(positions, dim: int, sections, theta: float = 1e6):
+    """Qwen2-VL M-RoPE: positions [B, 3, S] (t/h/w), sections sum to dim/2.
+
+    Returns cos/sin [B, S, 1, dim/2]: frequency slots are partitioned across
+    the three position streams.
+    """
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [B, 3, S, dim/2]
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=dim // 2
+    )  # [dim/2] -> which of t/h/w drives this frequency slot
+    angles = jnp.take_along_axis(
+        angles, sec_id[None, None, None, :].astype(jnp.int32), axis=1
+    )[:, 0]  # hmm: select per-slot stream
+    return jnp.cos(angles)[:, :, None, :], jnp.sin(angles)[:, :, None, :]
+
+
+def causal_mask(q_pos, k_pos, window: int | None = None):
+    """Boolean [.. Sq, Sk] allowed-attention mask."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m = m & (k_pos[..., None, :] > q_pos[..., :, None] - window)
+    return m

@@ -1,0 +1,177 @@
+"""Zamba2-style hybrid backbone (arXiv:2411.15242): a stack of Mamba2 blocks
+with a single *shared* transformer block invoked once per group of
+``attn_every`` SSM layers.  The shared block sees ``concat(h, h0)`` (current
+hidden + initial embedding) through an input projection — weights are shared
+across all invocations (per-invocation LoRA of the real model is omitted;
+noted in DESIGN.md).  Scan is over groups (54 = 9 groups x 6 layers), keeping
+the HLO small while giving the shared block exact per-invocation KV caches.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.common import ACTIVATIONS, Spec, rms_norm
+from repro.parallel.sharding import DP, constrain
+from repro.models.transformer import stack_specs
+
+
+def ssm_config(cfg: ModelConfig) -> ssm_mod.SSMConfig:
+    return ssm_mod.SSMConfig(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        expand=cfg.ssm_expand,
+        head_dim=cfg.ssm_headdim,
+        conv_width=cfg.conv_width,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def shared_attn_config(cfg: ModelConfig) -> attn.AttnConfig:
+    return attn.AttnConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.shared_attn_heads,
+        num_kv_heads=cfg.shared_attn_kv_heads,
+        head_dim=cfg.d_model // cfg.shared_attn_heads,
+        rope_theta=cfg.rope_theta,
+        q_chunk=cfg.q_chunk,
+    )
+
+
+def hybrid_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    n_groups = cfg.num_layers // cfg.attn_every
+    per_ssm = {"ln": Spec((d,), (None,), init="ones"), "ssm": ssm_mod.ssm_specs(ssm_config(cfg))}
+    group = stack_specs(per_ssm, cfg.attn_every)
+    shared = {
+        "norm_in": Spec((2 * d,), (None,), init="ones"),
+        "w_in": Spec((2 * d, d), (None, "embed")),
+        "attn": attn.attention_specs(shared_attn_config(cfg)),
+        "norm_mlp": Spec((d,), (None,), init="ones"),
+        "mlp": {
+            "w_gate": Spec((d, cfg.shared_d_ff), ("embed", "mlp")),
+            "w_up": Spec((d, cfg.shared_d_ff), ("embed", "mlp")),
+            "w_down": Spec((cfg.shared_d_ff, d), ("mlp", "embed")),
+        },
+    }
+    return {"groups": stack_specs(group, n_groups), "shared": shared}
+
+
+class HybridCache(NamedTuple):
+    ssm: object  # stacked SSMCache [n_groups, attn_every, ...]
+    kv: attn.KVCache  # stacked per-invocation [n_groups, ...]
+
+
+def _shared_block(shared, cfg: ModelConfig, h, h0, positions, mesh=None):
+    act = ACTIVATIONS[cfg.activation]
+    a_in = rms_norm(jnp.concatenate([h, h0], axis=-1), shared["norm_in"])
+    a = a_in @ shared["w_in"]
+    a = attn.attention_fwd(shared["attn"], shared_attn_config(cfg), a, positions, mesh=mesh)
+    h = h + a
+    m = rms_norm(h, shared["norm_mlp"])
+    m = act(m @ shared["mlp"]["w_gate"]) * (m @ shared["mlp"]["w_up"])
+    m = constrain(m, mesh, (DP, None, "model"))
+    return h + m @ shared["mlp"]["w_down"]
+
+
+def _shared_block_cached(shared, cfg, h, h0, positions, want_cache, mesh=None):
+    act = ACTIVATIONS[cfg.activation]
+    a_in = rms_norm(jnp.concatenate([h, h0], axis=-1), shared["norm_in"])
+    a = a_in @ shared["w_in"]
+    a, cache = attn.attention_fwd(
+        shared["attn"], shared_attn_config(cfg), a, positions, return_cache=True, mesh=mesh
+    )
+    h = h + a
+    m = rms_norm(h, shared["norm_mlp"])
+    m = act(m @ shared["mlp"]["w_gate"]) * (m @ shared["mlp"]["w_up"])
+    m = constrain(m, mesh, (DP, None, "model"))
+    return h + m @ shared["mlp"]["w_down"], cache
+
+
+def hybrid_forward(params, cfg: ModelConfig, h, positions, *, collect_caches=False, mesh=None):
+    """h [B,S,D] -> [B,S,D].  Scan over groups; shared-attn params closed over."""
+    h0 = h
+    scfg = ssm_config(cfg)
+
+    def _group_fwd(carry, group_params):
+        hh = _shared_block(params["shared"], cfg, carry, h0, positions, mesh=mesh)
+        for i in range(cfg.attn_every):
+            p = jax.tree.map(lambda x: x[i], group_params)
+            hh = hh + ssm_mod.ssm_fwd(p["ssm"], scfg, rms_norm(hh, p["ln"]), mesh=mesh)
+        return constrain(hh, mesh, (DP, None, None)), None
+
+    n_groups = cfg.num_layers // cfg.attn_every
+    body = jax.checkpoint(_group_fwd) if cfg.remat else _group_fwd
+    h, _ = jax.lax.scan(lambda c, p: body(c, p), h, params["groups"], unroll=n_groups if cfg.unroll else 1)
+    return h
+
+
+def hybrid_prefill(params, cfg: ModelConfig, h, positions, mesh=None):
+    h0 = h
+    scfg = ssm_config(cfg)
+
+    def _group(carry, group_params):
+        hh, cache = _shared_block_cached(params["shared"], cfg, carry, h0, positions, True, mesh=mesh)
+        ssm_caches = []
+        for i in range(cfg.attn_every):
+            p = jax.tree.map(lambda x: x[i], group_params)
+            y, sc = ssm_mod.ssm_fwd(p["ssm"], scfg, rms_norm(hh, p["ln"]), return_cache=True, mesh=mesh)
+            hh = hh + y
+            ssm_caches.append(sc)
+        ssm_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_caches)
+        return constrain(hh, mesh, (DP, None, None)), (cache, ssm_caches)
+
+    n_groups = cfg.num_layers // cfg.attn_every
+    body = jax.checkpoint(_group) if cfg.remat else _group
+    h, (kv, ssm_caches) = jax.lax.scan(lambda c, p: body(c, p), h, params["groups"], unroll=n_groups if cfg.unroll else 1)
+    return h, HybridCache(ssm=ssm_caches, kv=kv)
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, max_len: int) -> HybridCache:
+    scfg = ssm_config(cfg)
+    n_groups = cfg.num_layers // cfg.attn_every
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+    ssm_cache = stack(stack(ssm_mod.init_ssm_cache(scfg, batch), cfg.attn_every), n_groups)
+    kv = stack(attn.init_cache(shared_attn_config(cfg), batch, max_len), n_groups)
+    return HybridCache(ssm=ssm_cache, kv=kv)
+
+
+def hybrid_decode(params, cfg: ModelConfig, h, cache: HybridCache, pos, mesh=None):
+    """One-token decode.  h [B,1,D]."""
+    h0 = h
+    scfg = ssm_config(cfg)
+    act = ACTIVATIONS[cfg.activation]
+
+    def group_body(carry, inp):
+        hh = carry
+        group_params, kv_c, ssm_c = inp
+        a_in = rms_norm(jnp.concatenate([hh, h0], axis=-1), params["shared"]["norm_in"])
+        a = a_in @ params["shared"]["w_in"]
+        a, kv_c = attn.attention_decode(
+            params["shared"]["attn"], shared_attn_config(cfg), a, kv_c, pos, mesh=mesh
+        )
+        hh = hh + a
+        m = rms_norm(hh, params["shared"]["norm_mlp"])
+        m = act(m @ params["shared"]["mlp"]["w_gate"]) * (m @ params["shared"]["mlp"]["w_up"])
+        hh = hh + m @ params["shared"]["mlp"]["w_down"]
+        new_ssm = []
+        for i in range(cfg.attn_every):
+            p = jax.tree.map(lambda x: x[i], group_params)
+            ci = jax.tree.map(lambda x: x[i], ssm_c)
+            y, ci = ssm_mod.ssm_decode(p["ssm"], scfg, rms_norm(hh, p["ln"]), ci, mesh=mesh)
+            hh = hh + y
+            new_ssm.append(ci)
+        new_ssm = jax.tree.map(lambda *xs: jnp.stack(xs), *new_ssm)
+        return hh, (kv_c, new_ssm)
+
+    n_groups = cfg.num_layers // cfg.attn_every
+    h, (kv, ssm_new) = jax.lax.scan(group_body, h, (params["groups"], cache.kv, cache.ssm), unroll=n_groups if cfg.unroll else 1)
+    return h, HybridCache(ssm=ssm_new, kv=kv)

@@ -1,0 +1,166 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV activations are down-projected to a ``kv_lora_rank`` latent plus a small
+shared RoPE key; the KV cache stores only ``[B, S, kv_lora + rope]`` — the
+decode path runs in *absorbed* form (W_UK folded into the query, W_UV into
+the output), so per-token cache cost is ~(512+64) values instead of
+2 * heads * head_dim.  Training uses the naive (up-projected) form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Spec, apply_rope, causal_mask, rms_norm, rotary_embedding
+from repro.parallel.sharding import DP, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    num_heads: int
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 1e4
+    q_chunk: int = 1024
+    unroll: bool = False
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+def mla_specs(cfg: MLAConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    return {
+        "wq_a": Spec((d, cfg.q_lora_rank), ("embed", None)),
+        "q_norm": Spec((cfg.q_lora_rank,), (None,), init="ones"),
+        "wq_b": Spec((cfg.q_lora_rank, h * cfg.qk_head_dim), (None, "heads")),
+        "wkv_a": Spec((d, cfg.kv_lora_rank + cfg.qk_rope_head_dim), ("embed", None)),
+        "kv_norm": Spec((cfg.kv_lora_rank,), (None,), init="ones"),
+        "wkv_b": Spec(
+            (cfg.kv_lora_rank, h * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+            (None, "heads"),
+        ),
+        "wo": Spec((h * cfg.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array  # [B, S, kv_lora]
+    k_pe: jax.Array  # [B, S, rope_dim]
+
+
+def _queries(params, cfg: MLAConfig, x, positions, mesh=None):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q = rms_norm(x @ params["wq_a"], params["q_norm"]) @ params["wq_b"]
+    q = constrain(q.reshape(b, s, h, cfg.qk_head_dim), mesh, (DP, None, "model", None))
+    q_nope, q_pe = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    cos, sin = rotary_embedding(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos[..., None, :], sin[..., None, :])
+    return q_nope, q_pe
+
+
+def _latent_kv(params, cfg: MLAConfig, x, positions):
+    kv = x @ params["wkv_a"]
+    c_kv, k_pe = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"])
+    cos, sin = rotary_embedding(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+    k_pe = apply_rope(k_pe[:, :, None, :], cos[..., None, :], sin[..., None, :])[:, :, 0]
+    return c_kv, k_pe
+
+
+def mla_fwd(params, cfg: MLAConfig, x, positions, mesh=None):
+    """Training / prefill path (naive up-projected attention)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_pe = _queries(params, cfg, x, positions, mesh)
+    c_kv, k_pe = _latent_kv(params, cfg, x, positions)
+    kv = (c_kv @ params["wkv_b"]).reshape(b, s, h, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    kv = constrain(kv, mesh, (DP, None, "model", None))
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_head_dim], axis=-1)
+    scale = cfg.qk_head_dim ** -0.5
+
+    c = cfg.q_chunk
+    nc = s // c if (s > c and s % c == 0) else 1
+    c = s // nc
+    k_pos = positions
+
+    def chunk_attn(qni, qpi, pi, kn, kp, vv, kpos):
+        scores = (
+            jnp.einsum("bthd,bshd->bhts", qni, kn, preferred_element_type=jnp.float32)
+            + jnp.einsum("bthd,bsd->bhts", qpi, kp, preferred_element_type=jnp.float32)
+        ) * scale
+        mask = causal_mask(pi, kpos)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return jnp.einsum("bhts,bshd->bthd", probs, vv)
+
+    if cfg.unroll:
+        # static causal frontier (what a TPU splash kernel does)
+        outs = []
+        for i in range(nc):
+            end = (i + 1) * c
+            outs.append(
+                chunk_attn(
+                    q_nope[:, i * c : end], q_pe[:, i * c : end], positions[i * c : end],
+                    k_nope[:, :end], k_pe[:, :end], v[:, :end], k_pos[:end],
+                )
+            )
+        out = jnp.concatenate(outs, axis=1).reshape(b, s, h * cfg.v_head_dim)
+        return out @ params["wo"]
+
+    qn = q_nope.reshape(b, nc, c, h, -1).swapaxes(0, 1)
+    qp = q_pe.reshape(b, nc, c, h, -1).swapaxes(0, 1)
+    pos_c = positions.reshape(nc, c)
+
+    def body(_, inp):
+        qni, qpi, pi = inp
+        return None, chunk_attn(qni, qpi, pi, k_nope, k_pe, v, k_pos)
+
+    _, out = jax.lax.scan(body, None, (qn, qp, pos_c))
+    out = out.swapaxes(0, 1).reshape(b, s, h * cfg.v_head_dim)
+    return out @ params["wo"]
+
+
+def init_mla_cache(cfg: MLAConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_pe=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    )
+
+
+def mla_decode(params, cfg: MLAConfig, x, cache: MLACache, pos, mesh=None):
+    """Absorbed one-token decode over the compressed latent cache."""
+    b = x.shape[0]
+    h = cfg.num_heads
+    positions = jnp.asarray(pos, jnp.int32).reshape(1)
+    q_nope, q_pe = _queries(params, cfg, x, positions, mesh)  # [B,1,H,*]
+    c_kv_new, k_pe_new = _latent_kv(params, cfg, x, positions)
+    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_kv_new.astype(cache.c_kv.dtype), (0, pos, 0))
+    k_pe = jax.lax.dynamic_update_slice(cache.k_pe, k_pe_new.astype(cache.k_pe.dtype), (0, pos, 0))
+
+    wkv_b = params["wkv_b"].reshape(cfg.kv_lora_rank, h, -1)
+    w_uk = wkv_b[..., : cfg.qk_nope_head_dim]  # [lora, H, nope]
+    w_uv = wkv_b[..., cfg.qk_nope_head_dim :]  # [lora, H, v]
+    # absorb: q_lat = q_nope @ W_UK^T per head -> [B,1,H,lora]
+    q_lat = jnp.einsum("bthd,lhd->bthl", q_nope, w_uk)
+    scale = cfg.qk_head_dim ** -0.5
+    scores = (
+        jnp.einsum("bthl,bsl->bhts", q_lat, c_kv, preferred_element_type=jnp.float32)
+        + jnp.einsum("bthd,bsd->bhts", q_pe, k_pe, preferred_element_type=jnp.float32)
+    ) * scale
+    k_pos = jnp.arange(cache.c_kv.shape[1])
+    mask = causal_mask(positions, k_pos)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhts,bsl->bthl", probs, c_kv)  # [B,1,H,lora]
+    out = jnp.einsum("bthl,lhd->bthd", ctx_lat, w_uv).reshape(b, 1, h * cfg.v_head_dim)
+    return out @ params["wo"], MLACache(c_kv=c_kv, k_pe=k_pe)

@@ -1,0 +1,154 @@
+"""Family dispatch: one API over dense / MoE / SSM / hybrid backbones.
+
+    param_specs(cfg)                 -> Spec tree
+    forward(params, cfg, batch)      -> logits
+    loss_fn(params, cfg, batch)      -> scalar loss
+    prefill(params, cfg, batch)      -> (last logits, caches)
+    decode_step(params, cfg, caches, batch, pos) -> (logits, caches)
+    init_cache / abstract_cache      -> decode-state pytrees
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid as hyb
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.common import Spec, rms_norm, softcap
+from repro.parallel.sharding import DP, constrain
+
+__all__ = [
+    "param_specs",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "abstract_cache",
+]
+
+
+def _ssm_backbone_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    per = {"ln": Spec((d,), (None,), init="ones"), "ssm": ssm_mod.ssm_specs(hyb.ssm_config(cfg))}
+    return {
+        "embed": Spec((v, d), ("vocab", "embed"), init="embed"),
+        "layers": tfm.stack_specs(per, cfg.num_layers),
+        "final_norm": Spec((d,), (None,), init="ones"),
+        "lm_head": Spec((d, v), ("embed", "vocab")),
+    }
+
+
+def _hybrid_backbone_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs = {
+        "embed": Spec((v, d), ("vocab", "embed"), init="embed"),
+        "final_norm": Spec((d,), (None,), init="ones"),
+        "lm_head": Spec((d, v), ("embed", "vocab")),
+    }
+    specs.update(hyb.hybrid_specs(cfg))
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    if cfg.family in ("dense", "moe"):
+        return tfm.backbone_specs(cfg)
+    if cfg.family == "ssm":
+        return _ssm_backbone_specs(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_backbone_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+def _head(params, cfg: ModelConfig, h, mesh=None):
+    h = rms_norm(h, params["final_norm"], zero_centered=cfg.post_norms)
+    if cfg.frontend == "audio":
+        logits = constrain(jnp.einsum("bsd,kdv->bskv", h, params["lm_head"]), mesh, (DP, None, None, "model"))
+    else:
+        logits = constrain(h @ params["lm_head"], mesh, (DP, None, "model"))
+    return softcap(logits, cfg.final_softcap)
+
+
+def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None):
+    if cfg.family in ("dense", "moe"):
+        return tfm.forward(params, cfg, batch, mesh=mesh, probes=probes)
+    h = constrain(tfm._embed_in(params, cfg, batch), mesh, (DP, None, None))
+    s = h.shape[1]
+    if cfg.family == "ssm":
+        scfg = hyb.ssm_config(cfg)
+
+        def body(carry, p):
+            y = ssm_mod.ssm_fwd(p["ssm"], scfg, rms_norm(carry, p["ln"]), mesh=mesh)
+            return constrain(carry + y, mesh, (DP, None, None)), None
+
+        fn = jax.checkpoint(lambda c, p: body(c, p)) if cfg.remat else body
+        h, _ = jax.lax.scan(fn, h, params["layers"], unroll=cfg.num_layers if cfg.unroll else 1)
+    else:  # hybrid
+        h = hyb.hybrid_forward(params, cfg, h, jnp.arange(s), mesh=mesh)
+    return _head(params, cfg, h, mesh=mesh)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, mesh=None, probes=None):
+    """Mean next-token cross-entropy (fp32 log-softmax)."""
+    logits = forward(params, cfg, batch, mesh=mesh, probes=probes).astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def prefill(params, cfg: ModelConfig, batch, mesh=None):
+    if cfg.family in ("dense", "moe"):
+        return tfm.prefill(params, cfg, batch, mesh=mesh)
+    h = constrain(tfm._embed_in(params, cfg, batch), mesh, (DP, None, None))
+    s = h.shape[1]
+    if cfg.family == "ssm":
+        scfg = hyb.ssm_config(cfg)
+
+        def body(carry, p):
+            y, cache = ssm_mod.ssm_fwd(p["ssm"], scfg, rms_norm(carry, p["ln"]), return_cache=True, mesh=mesh)
+            return constrain(carry + y, mesh, (DP, None, None)), cache
+
+        fn = jax.checkpoint(lambda c, p: body(c, p)) if cfg.remat else body
+        h, caches = jax.lax.scan(fn, h, params["layers"], unroll=cfg.num_layers if cfg.unroll else 1)
+    else:
+        h, caches = hyb.hybrid_prefill(params, cfg, h, jnp.arange(s), mesh=mesh)
+    return _head(params, cfg, h[:, -1:], mesh=mesh), caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, batch, pos, mesh=None):
+    if cfg.family in ("dense", "moe"):
+        return tfm.decode_step(params, cfg, caches, batch, pos, mesh=mesh)
+    h = constrain(tfm._embed_in(params, cfg, batch), mesh, (DP, None, None))
+    if cfg.family == "ssm":
+        scfg = hyb.ssm_config(cfg)
+
+        def body(carry, inp):
+            p, c = inp
+            y, c = ssm_mod.ssm_decode(p["ssm"], scfg, rms_norm(carry, p["ln"]), c, mesh=mesh)
+            return carry + y, c
+
+        h, caches = jax.lax.scan(body, h, (params["layers"], caches), unroll=cfg.num_layers if cfg.unroll else 1)
+    else:
+        h, caches = hyb.hybrid_decode(params, cfg, h, caches, pos, mesh=mesh)
+    return _head(params, cfg, h, mesh=mesh), caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Zero decode caches (concrete)."""
+    if cfg.family in ("dense", "moe"):
+        return tfm.init_layer_caches(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        scfg = hyb.ssm_config(cfg)
+        one = ssm_mod.init_ssm_cache(scfg, batch)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one
+        )
+    return hyb.init_hybrid_cache(cfg, batch, max_len)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct cache tree (dry-run: no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))

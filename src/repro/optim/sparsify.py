@@ -1,0 +1,106 @@
+"""Training-time sparsity inducers (paper §1: TensorDash's benefits are
+amplified by methods that prune / quantise / selectively backpropagate).
+
+* :func:`prune_schedule` + :class:`PruneState` — gradual magnitude pruning
+  (Zhu & Gupta cubic ramp) with periodic mask refresh; models the paper's
+  resnet50_DS90 / _SM90 training-time-pruning setups (90% target).
+* :func:`pact` — PACT activation clipping + k-bit quantisation with a
+  straight-through estimator; values clipped to zero become TensorDash-
+  exploitable exact zeros.
+* :func:`meprop` — selective backprop: keep only the top-k-magnitude
+  gradient columns per token (meProp); the discarded gradient entries are
+  exact zeros in G_O, the paper's third sparsity source.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PruneState", "prune_schedule", "init_prune", "refresh_masks", "apply_masks", "pact", "meprop"]
+
+
+def prune_schedule(step, target: float, begin: int, end: int):
+    """Cubic sparsity ramp: 0 at ``begin`` -> ``target`` at ``end``."""
+    t = jnp.clip((step - begin) / jnp.maximum(end - begin, 1), 0.0, 1.0)
+    return target * (1.0 - (1.0 - t) ** 3)
+
+
+class PruneState(NamedTuple):
+    masks: dict  # pytree of bool masks (True = keep)
+
+
+def init_prune(params) -> PruneState:
+    return PruneState(masks=jax.tree.map(lambda p: jnp.ones(p.shape, bool), params))
+
+
+def _mask_one(p, sparsity):
+    """Keep the largest-|p| fraction (1 - sparsity) of entries."""
+    flat = jnp.abs(p.astype(jnp.float32)).reshape(-1)
+    k = jnp.clip(jnp.asarray(sparsity * flat.size, jnp.int32), 0, flat.size - 1)
+    thresh = jnp.sort(flat)[k]
+    return jnp.abs(p.astype(jnp.float32)) >= thresh
+
+
+def refresh_masks(params, state: PruneState, sparsity, *, min_size: int = 256) -> PruneState:
+    """Recompute magnitude masks at the scheduled sparsity (dynamic sparse
+    reparameterization: pruned weights may regrow on later refreshes since
+    masks are recomputed from current magnitudes, not intersected)."""
+    masks = jax.tree.map(
+        lambda p: _mask_one(p, sparsity) if p.size >= min_size and p.ndim >= 2 else jnp.ones(p.shape, bool),
+        params,
+    )
+    return PruneState(masks=masks)
+
+
+def apply_masks(params, state: PruneState):
+    return jax.tree.map(lambda p, m: p * m.astype(p.dtype), params, state.masks)
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def pact(x, alpha, bits: int = 4):
+    """PACT: clip to [0, alpha], quantise to ``bits`` levels (STE).
+
+    Sub-LSB values quantise to exactly zero — the quantisation-induced
+    sparsity TensorDash exploits (paper §1, PACT/LQ-Nets discussion).
+    """
+    levels = 2**bits - 1
+    y = jnp.clip(x, 0.0, alpha)
+    q = _ste_round(y / alpha * levels) * (alpha / levels)
+    return q
+
+
+@jax.custom_vjp
+def meprop(x, k):
+    return x
+
+
+def _meprop_fwd(x, k):
+    return x, (k, x.shape)
+
+
+def _meprop_bwd(res, g):
+    k, _ = res
+    mag = jnp.abs(g)
+    kth = jax.lax.top_k(mag.reshape(g.shape[0], -1), k)[0][:, -1]
+    kth = kth.reshape((g.shape[0],) + (1,) * (g.ndim - 1))
+    return (jnp.where(mag >= kth, g, 0.0), None)
+
+
+meprop.defvjp(_meprop_fwd, _meprop_bwd)

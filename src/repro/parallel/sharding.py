@@ -1,0 +1,210 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Parameters are declared with logical axes (see ``models/common.Spec``); this
+module maps them onto the production mesh:
+
+* ``model`` axis: tensor parallel (attention heads, FFN hidden, vocab) and
+  expert parallel (MoE expert dim; dispatch all-to-all lives in
+  ``models/moe.py``'s shard_map).
+* ``data`` axis (and ``pod``): batch data-parallel; additionally FSDP — the
+  d_model dim of weight matrices and the per-expert FFN dim are sharded over
+  ``data`` and (reduce-)gathered per scanned layer by XLA SPMD / shard_map.
+* Sequence parallelism: long-context (batch=1) decode shards the KV cache /
+  sequence dim over ``data``.
+
+Rules degrade gracefully: any logical dim not divisible by its mesh axis is
+replicated (e.g. Gemma-2's 8 heads or kv=2..8 GQA heads on a 16-wide model
+axis; Mamba2's 50280 vocab).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.common import Spec, axes_tree
+
+__all__ = [
+    "data_axes",
+    "param_pspecs",
+    "param_shardings",
+    "batch_pspecs",
+    "cache_pspecs",
+    "logits_pspec",
+    "constrain",
+]
+
+
+def constrain(x, mesh, spec: tuple):
+    """Divisibility-safe ``with_sharding_constraint``.
+
+    ``spec`` entries are mesh-axis names (or tuples of them, or None) per
+    dim; axes missing from the mesh or not dividing the dim are dropped.
+    No-op when ``mesh`` is None (single-device tests).
+
+    GSPMD propagation alone leaves the scanned residual stream replicated
+    over ``data`` (measured 16x compute waste at the production mesh — see
+    EXPERIMENTS.md §Perf iteration 1), so models pin activations explicitly.
+    """
+    if mesh is None:
+        return x
+    parts = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if not axes or size == 0 or dim % size != 0:
+            parts.append(None)
+        else:
+            parts.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+
+DP = ("pod", "data")  # batch data-parallel axes (filtered by mesh presence)
+
+# logical axis -> preferred mesh axis (checked for divisibility per tensor)
+LOGICAL_RULES: dict[str, str | None] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": "data",  # FSDP inside the MoE shard_map
+    "expert_embed": None,
+    "embed": "data",  # FSDP: gathered per layer
+    "layers": None,
+    "ssm_head": "model",
+}
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _pspec_for(spec: Spec, mesh: Mesh) -> P:
+    parts = []
+    used = set()
+    for dim, ax in zip(spec.shape, spec.axes):
+        rule = LOGICAL_RULES.get(ax) if ax else None
+        if rule is None or rule in used or rule not in mesh.axis_names:
+            parts.append(None)
+            continue
+        if dim % mesh.shape[rule] != 0:
+            parts.append(None)  # replicate non-divisible dims
+            continue
+        parts.append(rule)
+        used.add(rule)
+    return P(*parts)
+
+
+def param_pspecs(specs, mesh: Mesh):
+    """PartitionSpec tree matching a Spec tree."""
+    return jax.tree.map(
+        lambda s: _pspec_for(s, mesh), specs, is_leaf=lambda x: isinstance(x, Spec)
+    )
+
+
+def param_shardings(specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _pspec_for(s, mesh)),
+        specs,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def batch_pspecs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> dict[str, P]:
+    """PartitionSpecs for the input batch of one (arch x shape) cell."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b_ax = dp if shape.global_batch % dp_size == 0 else None
+    out: dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        out["inputs_embeds"] = P(b_ax, None, None)
+        out["positions"] = P(b_ax, None, None)
+    elif cfg.frontend == "audio":
+        out["inputs_embeds"] = P(b_ax, None, None)
+    else:
+        out["tokens"] = P(b_ax, None)
+    if shape.kind == "train":
+        out["labels"] = P(b_ax, None) if cfg.frontend != "audio" else P(b_ax, None, None)
+    return out
+
+
+def _seq_axis(cfg: ModelConfig, shape: InputShape, mesh: Mesh, batch_sharded: bool):
+    """Sequence-parallel fallback for unshardable (batch=1) long decode."""
+    if batch_sharded:
+        return None
+    if shape.seq_len % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def cache_pspecs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, cache_tree):
+    """Shardings for the decode cache pytree.
+
+    Layout conventions (leading stacked layer dims are replicated):
+      * attention KV  [L, B, S, KVH, D] -> (None, dp, seq?, model?, None)
+      * MLA latent    [L, B, S, R]      -> (None, dp, seq?, None)
+      * SSM conv      [L(,G), B, W, C]  -> (None, dp, None, model?)
+      * SSM state     [L(,G), B, H, P, N] -> (None, dp, model?, None, None)
+    """
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_sharded = shape.global_batch % dp_size == 0
+    b_ax = dp if batch_sharded else None
+    seq_ax = _seq_axis(cfg, shape, mesh, batch_sharded)
+    model_n = mesh.shape["model"]
+
+    def leaf_spec(x) -> P:
+        shp = x.shape
+        # find the batch dim: first dim equal to global_batch after leading
+        # stacked-layer dims
+        parts: list = [None] * len(shp)
+        bdim = None
+        for i, d in enumerate(shp):
+            if d == shape.global_batch:
+                bdim = i
+                break
+        if bdim is None:
+            return P(*parts)
+        parts[bdim] = b_ax
+        seq_dim = next(
+            (i for i in range(bdim + 1, len(shp)) if shp[i] == shape.seq_len), None
+        )
+        if seq_dim is not None and seq_ax and shp[seq_dim] % mesh.shape["data"] == 0:
+            # sequence-parallel KV for unshardable (batch=1) long decode
+            parts[seq_dim] = seq_ax
+        # model-shard the first non-sequence dim after batch (heads / d_inner)
+        for i in range(bdim + 1, len(shp)):
+            if i == seq_dim:
+                continue
+            if shp[i] % model_n == 0 and shp[i] > 1:
+                parts[i] = "model"
+                break
+        return P(*parts)
+
+    return jax.tree.map(leaf_spec, cache_tree)
+
+
+def logits_pspec(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> P:
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b_ax = dp if shape.global_batch % dp_size == 0 else None
+    v_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    if cfg.frontend == "audio":
+        return P(b_ax, None, None, v_ax)
+    return P(b_ax, None, v_ax)

@@ -1,0 +1,70 @@
+"""Batched serving: prefill + decode loop with greedy/temperature sampling.
+
+``prefill_step`` and ``decode_step`` are the two programs the dry-run lowers
+for the inference shapes (``prefill_32k``; ``decode_32k``/``long_500k`` =
+one new token against a seq_len cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+__all__ = ["prefill_step", "decode_one", "generate"]
+
+
+def prefill_step(params, cfg: ModelConfig, batch, mesh=None):
+    """Prompt -> (last-position logits, filled caches)."""
+    return M.prefill(params, cfg, batch, mesh=mesh)
+
+
+def decode_one(params, cfg: ModelConfig, caches, step_batch, pos, mesh=None):
+    """One token for every sequence in the batch."""
+    return M.decode_step(params, cfg, caches, step_batch, pos, mesh=mesh)
+
+
+def _sample(logits, key, temperature: float):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompt_tokens,
+    *,
+    max_new: int = 32,
+    max_len: int | None = None,
+    temperature: float = 0.0,
+    seed: int = 0,
+    mesh=None,
+):
+    """End-to-end batched generation (LM archs).  prompt [B, S] int32."""
+    b, s = prompt_tokens.shape
+    max_len = max_len or (s + max_new)
+    logits, caches = prefill_step(params, cfg, {"tokens": prompt_tokens}, mesh=mesh)
+    # grow caches to max_len
+    def grow(x):
+        if x.ndim >= 3 and x.shape[2] == s and x.shape[1] == b:  # [L, B, S, ...]
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, max_len - s)
+            return jnp.pad(x, pad)
+        return x
+
+    caches = jax.tree.map(grow, caches)
+    key = jax.random.PRNGKey(seed)
+    tok = _sample(logits[:, -1].astype(jnp.float32), key, temperature).astype(jnp.int32)
+    out = [tok]
+    for i in range(max_new - 1):
+        key, sub = jax.random.split(key)
+        logits, caches = decode_one(
+            params, cfg, caches, {"tokens": tok[:, None]}, jnp.int32(s + i), mesh=mesh
+        )
+        tok = _sample(logits[:, -1].astype(jnp.float32), sub, temperature).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)  # [B, max_new]

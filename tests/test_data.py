@@ -1,0 +1,30 @@
+"""Data pipeline: determinism + exactly-once elastic resume."""
+import numpy as np
+
+from repro.data.pipeline import SyntheticLM, host_shard
+
+
+def test_batch_at_is_pure():
+    d = SyntheticLM(vocab_size=1000, seq_len=32, global_batch=4, seed=3)
+    a = d.batch_at(17)
+    b = d.batch_at(17)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    d = SyntheticLM(vocab_size=1000, seq_len=32, global_batch=2, seed=0)
+    b = d.batch_at(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]), np.asarray(b["labels"][:, :-1]))
+
+
+def test_different_steps_differ():
+    d = SyntheticLM(vocab_size=1000, seq_len=32, global_batch=2, seed=0)
+    assert not np.array_equal(np.asarray(d.batch_at(0)["tokens"]), np.asarray(d.batch_at(1)["tokens"]))
+
+
+def test_host_shard_partitions():
+    d = SyntheticLM(vocab_size=1000, seq_len=8, global_batch=8, seed=0)
+    b = d.batch_at(0)
+    parts = [host_shard(b, i, 4)["tokens"] for i in range(4)]
+    rebuilt = np.concatenate([np.asarray(p) for p in parts], axis=0)
+    np.testing.assert_array_equal(rebuilt, np.asarray(b["tokens"]))

@@ -1,0 +1,85 @@
+"""Pallas kernel sweeps vs the pure-jnp oracle (interpret mode on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import matmul, sparse_ffn
+from repro.kernels.ref import matmul_ref, plan_blocks_ref, sparse_ffn_ref
+from repro.kernels.tensordash_spmm import plan_blocks, tensordash_matmul
+
+
+def _sparse_operand(rng, m, k, bm, bk, density):
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    mask = rng.random((m // bm, k // bk)) < density
+    return (a.reshape(m // bm, bm, k // bk, bk) * mask[:, None, :, None]).reshape(m, k)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (32, 64, 32, 16, 32, 16),
+    (64, 128, 48, 16, 32, 16),
+    (48, 96, 32, 16, 32, 32),
+    (128, 256, 64, 32, 64, 32),
+])
+@pytest.mark.parametrize("density", [0.0, 0.4, 1.0])
+def test_spmm_shapes(m, k, n, bm, bk, bn, density):
+    rng = np.random.default_rng(m + k + n)
+    a = _sparse_operand(rng, m, k, bm, bk, density)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    out = tensordash_matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bk=bk, bn=bn, interpret=True)
+    ref = matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(_sparse_operand(rng, 32, 64, 16, 32, 0.5)).astype(dtype)
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32)).astype(dtype)
+    out = tensordash_matmul(a, b, bm=16, bk=32, bn=16, interpret=True)
+    ref = matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_plan_blocks_matches_ref():
+    rng = np.random.default_rng(3)
+    a = _sparse_operand(rng, 64, 128, 16, 32, 0.5)
+    nnz, idx = plan_blocks(jnp.asarray(a), 16, 32)
+    nnz_r, idx_r = plan_blocks_ref(a, 16, 32)
+    np.testing.assert_array_equal(np.asarray(nnz), nnz_r)
+    np.testing.assert_array_equal(np.asarray(idx), idx_r)
+
+
+def test_plan_all_zero_rows():
+    a = np.zeros((32, 64), np.float32)
+    nnz, idx = plan_blocks(jnp.asarray(a), 16, 32)
+    assert (np.asarray(nnz) == 0).all()
+    out = tensordash_matmul(
+        jnp.asarray(a), jnp.ones((64, 16), jnp.float32), bm=16, bk=32, bn=16, interpret=True
+    )
+    assert (np.asarray(out) == 0).all()
+
+
+def test_sparse_ffn_matches_ref():
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((4, 8, 64)).astype(np.float32)
+    w1 = rng.standard_normal((64, 128)).astype(np.float32)
+    w2 = rng.standard_normal((128, 64)).astype(np.float32)
+    out = sparse_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2), mode="interpret", bm=16, bk=32, bn=16)
+    ref = sparse_ffn_ref(jnp.asarray(x.reshape(32, 64)), jnp.asarray(w1), jnp.asarray(w2)).reshape(4, 8, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,k,bm,bk", [(32, 64, 16, 32), (64, 128, 16, 64), (128, 128, 32, 32)])
+def test_block_zero_mask_kernel(m, k, bm, bk):
+    from repro.kernels.block_mask import block_zero_mask
+
+    rng = np.random.default_rng(m * k)
+    a = _sparse_operand(rng, m, k, bm, bk, 0.5)
+    got = block_zero_mask(jnp.asarray(a), bm=bm, bk=bk, interpret=True)
+    ref = (
+        a.reshape(m // bm, bm, k // bk, bk).any(axis=(1, 3)).astype(np.int8)
+    )
+    np.testing.assert_array_equal(np.asarray(got), ref)

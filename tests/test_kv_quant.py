@@ -1,0 +1,41 @@
+"""int8 KV cache (§Perf iteration 7): fidelity within quantization noise."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import model as M
+from repro.models.common import init_params
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "gemma2-2b"])
+def test_int8_kv_decode_close_to_fp(arch):
+    cfg = dataclasses.replace(reduce_config(get_config(arch)), kv_cache_quant=True)
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0), dtype=jnp.float32)
+    s = 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, cfg.vocab_size)
+    full = M.forward(params, cfg, {"tokens": toks, "labels": toks})
+    _, caches = M.prefill(params, cfg, {"tokens": toks[:, :-1]})
+
+    def grow(x):
+        if x.ndim >= 3 and x.shape[2] == s - 1:
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, 1)
+            return jnp.pad(x, pad)
+        return x
+
+    caches = jax.tree.map(grow, caches)
+    lg, _ = M.decode_step(params, cfg, caches, {"tokens": toks[:, -1:]}, jnp.int32(s - 1))
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full[:, -1]), rtol=0.08, atol=0.08
+    )
+
+
+def test_int8_cache_is_int8():
+    cfg = dataclasses.replace(reduce_config(get_config("deepseek-7b")), kv_cache_quant=True)
+    cache = M.init_cache(cfg, 2, 16)
+    assert cache["layers"].k.dtype == jnp.int8
+    assert cache["layers"].k_scale.dtype == jnp.float32

@@ -1,0 +1,60 @@
+"""Mask / positional-encoding properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import causal_mask, mrope_tables, rotary_embedding, apply_rope
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 24))
+def test_causal_mask_never_future(sq, sk):
+    q = jnp.arange(sq)
+    k = jnp.arange(sk)
+    m = np.asarray(causal_mask(q, k))
+    for i in range(sq):
+        for j in range(sk):
+            assert m[i, j] == (j <= i)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 8))
+def test_sliding_window_width(s, w):
+    q = jnp.arange(s)
+    m = np.asarray(causal_mask(q, q, window=w))
+    assert (m.sum(axis=1) <= w).all()
+    assert m.diagonal().all()
+
+
+def test_rope_preserves_norm():
+    x = jnp.ones((1, 8, 2, 16))
+    cos, sin = rotary_embedding(jnp.arange(8), 16)
+    y = apply_rope(x, cos[:, None, :], sin[:, None, :])
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_mrope_equals_rope_when_positions_agree():
+    """With identical t/h/w position streams, M-RoPE == standard RoPE."""
+    s, dim = 8, 16
+    pos3 = jnp.broadcast_to(jnp.arange(s), (1, 3, s)).astype(jnp.int32)
+    mc, ms = mrope_tables(pos3, dim, (4, 2, 2), theta=1e4)
+    c, sn = rotary_embedding(jnp.arange(s), dim, 1e4)
+    np.testing.assert_allclose(np.asarray(mc[0, :, 0]), np.asarray(c), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ms[0, :, 0]), np.asarray(sn), rtol=1e-6)
+
+
+def test_mrope_sections_select_streams():
+    """Frequency slots must follow their assigned position stream."""
+    s, dim = 4, 16
+    pos = jnp.zeros((1, 3, s), jnp.int32)
+    pos = pos.at[0, 0].set(jnp.arange(s))          # only temporal varies
+    mc, _ = mrope_tables(pos, dim, (4, 2, 2), theta=1e4)
+    # slots 0-3 (temporal) vary with s; slots 4-7 (h/w, constant 0) don't
+    var_t = np.asarray(mc[0, :, 0, :4]).std(axis=0)
+    var_hw = np.asarray(mc[0, :, 0, 4:]).std(axis=0)
+    assert (var_t > 1e-6).any()
+    assert (var_hw < 1e-9).all()

@@ -1,0 +1,92 @@
+"""AdamW + int8 error-feedback gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state, lr_at
+from repro.optim.compress import dequantize, init_residuals, quantize
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = init_opt_state(params)
+    cfg = OptConfig(lr=0.2, warmup_steps=0, total_steps=200, weight_decay=0.0, clip_norm=10.0)
+    for _ in range(150):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 0.2
+
+
+def test_lr_schedule_warmup_and_decay():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.int32(5))) < float(lr_at(cfg, jnp.int32(10)))
+    assert abs(float(lr_at(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr_at(cfg, jnp.int32(100))) <= 0.1 + 1e-6
+
+
+def test_grad_clipping():
+    params = {"x": jnp.zeros(3)}
+    state = init_opt_state(params)
+    cfg = OptConfig(lr=1.0, warmup_steps=0, clip_norm=1.0, weight_decay=0.0)
+    _, _, m = apply_updates(params, {"x": jnp.asarray([100.0, 0, 0])}, state, cfg)
+    assert float(m["grad_norm"]) > 99
+
+
+def test_int8_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    q, scale = quantize(x)
+    err = jnp.abs(dequantize(q, scale) - x)
+    assert float(err.max()) <= float(scale) / 2 + 1e-7
+
+
+def test_error_feedback_preserves_signal():
+    """Residual accumulation: repeated EF-compression of a constant gradient
+    converges to transmitting it exactly on average."""
+    g = jnp.full((64,), 0.01, jnp.float32) + jnp.linspace(0, 1e-3, 64)
+    r = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s = quantize(g + r)
+        deq = dequantize(q, s)
+        r = g + r - deq
+        sent = sent + deq
+    np.testing.assert_allclose(np.asarray(sent / 50), np.asarray(g), rtol=0.05, atol=1e-4)
+
+
+def test_prune_schedule_and_masks():
+    import jax
+    import jax.numpy as jnp
+    from repro.optim.sparsify import (
+        apply_masks, init_prune, prune_schedule, refresh_masks,
+    )
+
+    s0 = float(prune_schedule(jnp.int32(0), 0.9, 0, 100))
+    s_end = float(prune_schedule(jnp.int32(100), 0.9, 0, 100))
+    assert s0 == 0.0 and abs(s_end - 0.9) < 1e-6
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 32))}
+    st = refresh_masks(params, init_prune(params), 0.75)
+    masked = apply_masks(params, st)
+    frac = float(jnp.mean(masked["w"] == 0))
+    assert 0.70 < frac < 0.80  # ~75% zeros, TensorDash-exploitable
+
+
+def test_pact_quantization_induces_zeros():
+    import jax.numpy as jnp
+    from repro.optim.sparsify import pact
+
+    x = jnp.linspace(-1, 2.0, 101)
+    q = pact(x, alpha=1.0, bits=4)
+    assert float(jnp.mean(q == 0)) > 0.3  # negatives + sub-LSB clip to 0
+    assert float(q.max()) <= 1.0
+
+
+def test_meprop_sparsifies_gradients():
+    import jax
+    import jax.numpy as jnp
+    from repro.optim.sparsify import meprop
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    g = jax.grad(lambda v: jnp.sum(jnp.sin(meprop(v, 8))))(x)
+    per_row_nnz = (g != 0).sum(axis=-1)
+    assert int(per_row_nnz.max()) <= 8  # top-k selective backprop

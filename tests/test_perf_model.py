@@ -1,0 +1,39 @@
+"""Perf model properties: bounds, monotonicity, paper Fig. 20 tracking."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_model import ConvLayer, TileConfig, simulate_conv
+
+LAYER = ConvLayer("l", 64, 3, 3, 16, 8, 8)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([0.1, 0.5, 0.9]))
+def test_speedup_bounds(sparsity):
+    r = simulate_conv(LAYER, sparsity=sparsity, sample_groups=1, max_t=36)
+    assert 1.0 <= r.speedup <= 3.0 + 1e-6
+
+
+def test_monotone_in_sparsity():
+    sp = [simulate_conv(LAYER, sparsity=s, sample_groups=1, max_t=36, seed=4).speedup
+          for s in (0.1, 0.5, 0.9)]
+    assert sp[0] < sp[1] < sp[2]
+
+
+def test_tracks_ideal_at_low_sparsity():
+    r = simulate_conv(LAYER, sparsity=0.1, clustering=0.0, sample_groups=1, max_t=64)
+    assert abs(r.speedup - 1.11) < 0.08  # paper: ~1.1x @ 10%
+
+
+def test_near_cap_at_high_sparsity():
+    r = simulate_conv(LAYER, sparsity=0.95, clustering=0.0, sample_groups=1, max_t=64)
+    assert r.speedup > 2.5  # paper: 2.95x @ 90%
+
+
+def test_rows_degrade_with_clustering():
+    s1 = simulate_conv(LAYER, sparsity=0.66, tile=TileConfig(rows=1), clustering=0.6,
+                       sample_groups=1, max_t=48, seed=7).speedup
+    s16 = simulate_conv(LAYER, sparsity=0.66, tile=TileConfig(rows=16), clustering=0.6,
+                        sample_groups=1, max_t=48, seed=7).speedup
+    assert s16 < s1  # paper fig 17

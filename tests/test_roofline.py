@@ -1,0 +1,29 @@
+"""Roofline HLO parsing."""
+from repro.launch.roofline import RooflineTerms, collective_bytes
+
+HLO = """
+  %all-reduce = f32[256,1024]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%sum
+  %all-reduce.1 = f32[] all-reduce(%all-reduce), channel_id=2, replica_groups=[4,2]<=[2,4]T(1,0), to_apply=%sum
+  %all-gather = bf16[8,4096]{1,0} all-gather(%shard), channel_id=3, replica_groups=[2,4]<=[8], dimensions={0}
+  %reduce-scatter = f32[2,128]{1,0} reduce-scatter(%y), channel_id=4, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%sum
+  %all-to-all = bf16[16,64]{1,0} all-to-all(%z), channel_id=5, replica_groups=[4,2]<=[8]
+  %ag-start = (f32[4,8], f32[16,8]) all-gather-start(%w), channel_id=6, replica_groups=[2,4]<=[8]
+  %ag-done = f32[16,8] all-gather-done(%ag-start)
+  %not-a-collective = f32[2] add(%a, %b)
+"""
+
+
+def test_collective_bytes_parsing():
+    out = collective_bytes(HLO)
+    assert out["all-reduce"] == 256 * 1024 * 4 + 4
+    assert out["all-gather"] == (8 * 4096 * 2) // 4 + (16 * 8 * 4) // 4
+    assert out["reduce-scatter"] == 2 * 128 * 4 * 4
+    assert out["all-to-all"] == 16 * 64 * 2
+
+
+def test_terms_and_dominance():
+    t = RooflineTerms(flops=197e12 * 256, hbm_bytes=819e9, coll_bytes=0.0, chips=256)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert t.dominant == "compute"
+    t2 = RooflineTerms(flops=1.0, hbm_bytes=819e9 * 256 * 5, coll_bytes=0.0, chips=256)
+    assert t2.dominant == "memory"

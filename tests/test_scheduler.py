@@ -1,0 +1,90 @@
+"""TensorDash scheduler invariants (paper §3.1-3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import connectivity, levels, make_schedule_step
+from repro.core.pe import simulate_stream, simulate_tile
+
+
+def test_levels_match_paper():
+    assert levels(16, 2) == ((0, 5, 10), (1, 6, 11), (2, 7, 12), (3, 8, 13), (4, 9, 14), (15,))
+
+
+def test_connectivity_lane8_matches_fig9():
+    s, l = connectivity(16, 2)
+    assert list(zip(s[8].tolist(), l[8].tolist())) == [
+        (0, 8), (1, 8), (2, 8), (1, 7), (1, 9), (2, 6), (2, 10), (1, 5)
+    ]
+
+
+def test_connectivity_depth2_has_5_movements():
+    s, _ = connectivity(16, 1)
+    assert s.shape[1] == 5  # paper fig 19: 5 movements per multiplier
+
+
+def test_levels_are_conflict_free():
+    s, l = connectivity(16, 2)
+    opts = [set(zip(s[i].tolist(), l[i].tolist())) for i in range(16)]
+    for lvl in levels(16, 2):
+        for i in lvl:
+            for j in lvl:
+                if i != j:
+                    assert not (opts[i] & opts[j])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**48 - 1), st.floats(0.0, 1.0))
+def test_schedule_step_valid(seed, density):
+    """Each effectual pair consumed at most once; row0 fully drained; every
+    selected option was actually effectual."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.random((3, 16)) < density)
+    step = make_schedule_step(16, 2)
+    res = step(z)
+    s_tab, l_tab = connectivity(16, 2)
+    z_np, out_np = np.asarray(z), np.asarray(res.z_out)
+    consumed = z_np & ~out_np
+    sel = np.asarray(res.sel)
+    chosen = np.zeros_like(z_np)
+    for i in range(16):
+        if sel[i] < 8:
+            sstep, slane = s_tab[i, sel[i]], l_tab[i, sel[i]]
+            assert z_np[sstep, slane], "selected an ineffectual pair"
+            assert not chosen[sstep, slane], "pair selected twice"
+            chosen[sstep, slane] = True
+    assert (consumed == chosen).all()
+    assert not out_np[0].any(), "row 0 must fully drain (AS >= 1)"
+    assert 1 <= int(res.advance) <= 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([0.0, 0.3, 0.7, 1.0]))
+def test_stream_never_slower_and_bounded(seed, sparsity):
+    rng = np.random.default_rng(seed)
+    t = 48
+    z = jnp.asarray(rng.random((t, 16)) >= sparsity)
+    r = simulate_stream(z)
+    assert int(r.cycles) <= t  # never slower than dense
+    assert int(r.cycles) >= int(np.ceil(t / 3))  # staging depth bound (3x)
+
+
+def test_dense_stream_exact():
+    z = jnp.ones((32, 16), bool)
+    assert int(simulate_stream(z).cycles) == 32
+
+
+def test_empty_stream_max_speedup():
+    z = jnp.zeros((33, 16), bool)
+    assert int(simulate_stream(z).cycles) == int(np.ceil(33 / 3))
+
+
+def test_tile_lockstep_never_faster_than_worst_row():
+    rng = np.random.default_rng(0)
+    zr = jnp.asarray(rng.random((4, 40, 16)) < 0.3)
+    tile = int(simulate_tile(zr).cycles)
+    per_row = max(int(simulate_stream(zr[i]).cycles) for i in range(4))
+    assert tile >= per_row
+    assert tile <= 40

@@ -1,0 +1,70 @@
+"""Logical-axis sharding rules (duck-typed meshes; no device forcing)."""
+import types
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.models import model as M
+from repro.models.common import Spec
+from repro.parallel.sharding import batch_pspecs, param_pspecs
+
+
+def fake_mesh(shape: dict):
+    m = types.SimpleNamespace()
+    m.axis_names = tuple(shape)
+    m.shape = dict(shape)
+    return m
+
+
+MESH = fake_mesh({"data": 16, "model": 16})
+MESH3 = fake_mesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_tp_fsdp_2d_sharding():
+    specs = {"w": Spec((4096, 11008), ("embed", "mlp"))}
+    ps = param_pspecs(specs, MESH)
+    assert ps["w"] == P("data", "model")
+
+
+def test_non_divisible_falls_back_to_replicated():
+    specs = {"w": Spec((50280, 1536), ("vocab", "embed"))}  # mamba2 vocab
+    ps = param_pspecs(specs, MESH)
+    assert ps["w"] == P(None, "data")
+
+
+def test_small_kv_heads_flattened_dim_shards():
+    # gemma2: kv=4 heads but the *flattened* kv dim (4*256=1024) divides the
+    # 16-way model axis, so TP slices within head_dim — valid and preferred.
+    cfg = get_config("gemma2-2b")
+    specs = M.param_specs(cfg)
+    ps = param_pspecs(specs, MESH)
+    assert ps["layers"]["attn"]["wk"] == P(None, "data", "model")
+
+
+def test_truly_non_divisible_dim_replicates():
+    specs = {"wk": Spec((128, 24), ("embed", "kv_heads"))}  # 24 % 16 != 0
+    ps = param_pspecs(specs, MESH)
+    assert ps["wk"] == P("data", None)
+
+
+def test_moe_expert_sharding_matches_shard_map_contract():
+    cfg = get_config("deepseek-v2-236b")
+    specs = M.param_specs(cfg)
+    ps = param_pspecs(specs, MESH3)
+    # experts over model, FFN dim FSDP over data (contract in models/moe.py);
+    # leading dim is the scanned layer stack (replicated)
+    assert ps["layers"]["mlp"]["w_gate"] == P(None, "model", None, "data")
+    assert ps["layers"]["mlp"]["w_down"] == P(None, "model", "data", None)
+
+
+def test_batch_pspec_uses_all_dp_axes():
+    cfg = get_config("deepseek-7b")
+    bp = batch_pspecs(cfg, SHAPES["train_4k"], MESH3)
+    assert bp["tokens"] == P(("pod", "data"), None)
+
+
+def test_long_decode_batch1_not_batch_sharded():
+    cfg = get_config("mamba2-780m")
+    bp = batch_pspecs(cfg, SHAPES["long_500k"], MESH)
+    assert bp["tokens"] == P(None, None)

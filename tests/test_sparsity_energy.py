@@ -1,0 +1,74 @@
+"""Sparsity instrumentation + energy model calibration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import BF16, FP32, EnergyModel
+from repro.core.sparsity import apply_probes, block_mask, grad_sparsity, measure
+
+
+def test_measure_counts():
+    x = jnp.asarray([[0.0, 1.0, 0.0, 2.0]] * 4)
+    s = measure(x, block=4)
+    assert float(s.zeros) == 8
+    assert float(s.total) == 16
+    assert float(s.fraction) == 0.5
+
+
+def test_block_mask_detects_zero_blocks():
+    x = jnp.zeros((2, 32))
+    x = x.at[0, 16:].set(1.0)
+    bm = block_mask(x, block=16)
+    assert bm.tolist() == [[True, False], [True, True]]
+
+
+def test_block_mask_pads_partial_blocks():
+    x = jnp.ones((1, 20))
+    bm = block_mask(x, block=16)
+    assert bm.shape == (1, 2)
+    assert not bool(bm.any())
+
+
+def test_grad_probe_recovers_relu_mask():
+    """d loss / d probe at a post-ReLU tap == upstream grad * relu mask: its
+    zero pattern must match the ReLU's inactive units exactly."""
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)), jnp.float32)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((4, 8)), jnp.float32)
+
+    def loss(params, probes):
+        h = jnp.maximum(x @ params, 0.0)
+        h = apply_probes(h, probes, "post_relu")
+        return jnp.sum(h * h)
+
+    probes = {"post_relu": jnp.zeros((4, 8), jnp.float32)}
+    g = jax.grad(lambda pr: loss(w, pr))(probes)["post_relu"]
+    relu_inactive = (x @ w) <= 0
+    assert bool(jnp.all((g == 0) == relu_inactive))
+    stats = grad_sparsity(lambda p, pr: loss(p, pr), w, probes)
+    assert abs(float(stats["post_relu"].fraction) - float(relu_inactive.mean())) < 1e-6
+
+
+def test_energy_calibration_matches_paper():
+    em = EnergyModel(FP32)
+    assert abs(em.compute_area_overhead() - 1.09) < 0.02  # paper 1.09x
+    assert abs(EnergyModel(BF16).compute_area_overhead() - 1.13) < 0.005
+    eff = em.efficiency(1.95, sram_compression=1.4)
+    assert 1.7 < eff["compute_efficiency"] < 2.1  # paper 1.89x
+    assert 1.4 < eff["chip_efficiency"] < 1.9  # paper 1.6x
+
+
+def test_powergate_no_sparsity_costs_nothing():
+    """Paper 4.4 GCN: virtually no sparsity -> gated off, exactly baseline."""
+    from repro.core.powergate import gated_layer_outcome
+
+    out = gated_layer_outcome(0.0, 1.01)
+    assert not out["enabled"]
+    assert out["speedup"] == 1.0 and out["energy_ratio"] == 1.0
+
+
+def test_powergate_enables_on_sparsity():
+    from repro.core.powergate import gated_layer_outcome
+
+    out = gated_layer_outcome(0.6, 1.9)
+    assert out["enabled"]
+    assert out["energy_ratio"] < 0.6  # 1.9x speedup >> 1.8% power adder

@@ -1,0 +1,70 @@
+"""End-to-end system behaviour: train -> checkpoint -> resume -> serve, with
+TensorDash sparsity instrumentation feeding the paper's perf model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import latest_step, restore, save
+from repro.configs import get_config, reduce_config
+from repro.core.perf_model import ConvLayer, simulate_conv
+from repro.core.sparsity import measure
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.models.common import init_params
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.serve.engine import generate
+from repro.train.step import make_train_step
+
+
+def test_train_checkpoint_resume_equivalence(tmp_path):
+    """Training 6 steps == training 3, checkpointing, restoring, training 3."""
+    cfg = reduce_config(get_config("qwen3-4b"))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4, seed=5)
+    ocfg = OptConfig(lr=1e-3, warmup_steps=1, total_steps=20)
+    step = jax.jit(make_train_step(cfg, ocfg))
+
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    for i in range(6):
+        params, opt, _ = step(params, opt, data.batch_at(i))
+
+    p2 = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    o2 = init_opt_state(p2)
+    for i in range(3):
+        p2, o2, _ = step(p2, o2, data.batch_at(i))
+    save(str(tmp_path), 3, {"params": p2, "opt": o2})
+    st = latest_step(str(tmp_path))
+    restored = restore(str(tmp_path), st, {"params": p2, "opt": o2})
+    p3, o3 = restored["params"], restored["opt"]
+    for i in range(3, 6):
+        p3, o3, _ = step(p3, o3, data.batch_at(i))
+
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_sparsity_instrumentation_to_perf_projection():
+    """Measured activation sparsity feeds the TensorDash model end-to-end."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    h = jnp.maximum(x, 0.0)  # ReLU: ~50% zeros
+    stats = measure(h)
+    frac = float(stats.fraction)
+    assert 0.3 < frac < 0.7
+    r = simulate_conv(
+        ConvLayer("probe", 64, 1, 1, 16, 8, 8), sparsity=frac, sample_groups=1, max_t=32
+    )
+    assert 1.2 < r.speedup <= 3.0
+
+
+def test_end_to_end_train_then_serve():
+    cfg = reduce_config(get_config("deepseek-7b"))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4, seed=9)
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3)))
+    for i in range(3):
+        params, opt, m = step(params, opt, data.batch_at(i))
+    out = generate(params, cfg, data.batch_at(0)["tokens"][:, :8], max_new=4)
+    assert out.shape == (4, 4)

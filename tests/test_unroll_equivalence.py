@@ -1,0 +1,57 @@
+"""The unrolled (measurement/static-causal) program must compute exactly the
+same function as the production scan program — the §Perf attention
+optimizations only skip provably-masked work."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import model as M
+from repro.models.common import init_params
+
+ARCHS = ["deepseek-7b", "gemma2-2b", "deepseek-v2-236b", "zamba2-2.7b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_unroll_matches_scan(arch):
+    cfg = reduce_config(get_config(arch))
+    cfg = dataclasses.replace(cfg, q_chunk=8)  # multiple chunks over S=32
+    # fp32 params: the transformation must be numerically *exact* (bf16 only
+    # adds reassociation noise that obscures real masking bugs)
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0), dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    a = M.forward(params, cfg, batch)
+    b = M.forward(params, dataclasses.replace(cfg, unroll=True), batch)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "deepseek-v2-236b"])
+def test_decode_unroll_matches_scan(arch):
+    cfg = reduce_config(get_config(arch))
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0), dtype=jnp.float32)
+    s = 32
+    caches = M.init_cache(cfg, 2, s)
+    # pre-fill caches via prefill so the window slice has real content
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, cfg.vocab_size)
+    _, caches = M.prefill(params, cfg, {"tokens": toks[:, : s - 1]})
+
+    def grow(x):
+        if x.ndim >= 3 and (s - 1) in x.shape[2:3]:
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, 1)
+            return jnp.pad(x, pad)
+        return x
+
+    caches = jax.tree.map(grow, caches)
+    step = {"tokens": toks[:, -1:]}
+    la, ca = M.decode_step(params, cfg, caches, step, jnp.int32(s - 1))
+    lb, cb = M.decode_step(
+        params, dataclasses.replace(cfg, unroll=True), caches, step, jnp.int32(s - 1)
+    )
+    np.testing.assert_allclose(
+        np.asarray(la, np.float32), np.asarray(lb, np.float32), rtol=1e-3, atol=1e-3
+    )
