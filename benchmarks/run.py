@@ -2,10 +2,23 @@
 
 Prints ``name,us_per_call,derived`` CSV.  ``derived`` is a semicolon-joined
 summary of the reproduced numbers (no commas, CSV-safe).
+
+``--smoke`` runs only the fast micro benchmarks (kernel, scheduler, plan
+cache) — the CI job that keeps plan-cache / hot-path regressions visible.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
+
+# runnable as `python benchmarks/run.py` with no PYTHONPATH incantation:
+# repro lives under src/, and the fig/table modules import as `benchmarks.*`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if os.path.isdir(_p) and _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def _timed(fn, *args, **kw):
@@ -93,8 +106,7 @@ def bench_spmm_kernel():
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.kernels.ops import matmul
-    from repro.kernels.tensordash_spmm import plan_blocks
+    from repro.runtime import Runtime
 
     rng = np.random.default_rng(0)
     m, k, n = 128, 256, 64
@@ -102,12 +114,49 @@ def bench_spmm_kernel():
     mask = rng.random((m // 16, k // 32)) < 0.5
     a = (a.reshape(m // 16, 16, k // 32, 32) * mask[:, None, :, None]).reshape(m, k)
     b = rng.standard_normal((k, n)).astype(np.float32)
-    out, us = _timed(matmul, jnp.asarray(a), jnp.asarray(b), mode="interpret", bm=16, bk=32, bn=16)
+    rt = Runtime(backend="interpret", bm=16, bk=32, bn=16)
+    out, us = _timed(rt.matmul, jnp.asarray(a), jnp.asarray(b))
     ref = a @ b
     err = float(abs(np.asarray(out) - ref).max())
-    nnz, _ = plan_blocks(jnp.asarray(a), 16, 32)
-    skipped = 1.0 - float(nnz.sum()) / (mask.size)
+    skipped = rt.plan(jnp.asarray(a)).skipped_fraction()
     return us, f"max_err={err:.1e} blocks_skipped={skipped:.0%} (interpret-mode validation)"
+
+
+def bench_plan_cache():
+    """Hot-path win of reusable SparsityPlans: decode-style weight-side
+    matmul with a cached plan vs re-planning every call (the old behaviour).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime import Runtime
+
+    rng = np.random.default_rng(0)
+    m, k, n, bm, bk, bn = 8, 256, 512, 8, 32, 32
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    wmask = rng.random((n // bn, k // bk)) < 0.3  # 70% block-pruned weight
+    w = jnp.asarray((w.T.reshape(n // bn, bn, k // bk, bk) * wmask[:, None, :, None])
+                    .reshape(n, k).T)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    rt = Runtime(backend="dense", bm=bm, bk=bk, bn=bn)
+    rt.matmul(x, w, plan_key="w", side="B").block_until_ready()  # prefill: plan once
+    rt.matmul(x, w, plan=rt.plan(w, side="B"), side="B").block_until_ready()  # warm
+
+    def timed(fn, reps=20):
+        t0 = time.time()
+        for _ in range(reps):
+            fn().block_until_ready()
+        return (time.time() - t0) / reps * 1e6
+
+    # same planned executor both sides; the delta is the per-call replanning
+    cached = timed(lambda: rt.matmul(x, w, plan_key="w", side="B"))
+    replan = timed(lambda: rt.matmul(x, w, plan=rt.plan(w, side="B"), side="B"))
+    s = rt.plan_cache.stats()
+    return cached, (
+        f"cached={cached:.0f}us replan={replan:.0f}us "
+        f"speedup={replan / max(cached, 1e-9):.2f}x "
+        f"hits={s['hits']} misses={s['misses']}"
+    )
 
 
 def bench_arch_projection():
@@ -127,18 +176,31 @@ BENCHES = [
     ("table3_area_power_energy", bench_table3),
     ("scheduler_step_micro", bench_scheduler_step),
     ("tensordash_spmm_micro", bench_spmm_kernel),
+    ("plan_cache_micro", bench_plan_cache),
     ("arch_tensordash_projection", bench_arch_projection),
 ]
 
+SMOKE = {"scheduler_step_micro", "tensordash_spmm_micro", "plan_cache_micro"}
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast micro benches only (CI perf-regression job)")
+    args = ap.parse_args()
+    failed = False
     print("name,us_per_call,derived")
     for name, fn in BENCHES:
+        if args.smoke and name not in SMOKE:
+            continue
         try:
             us, derived = fn()
             print(f"{name},{us:.0f},{derived}")
         except Exception as e:  # pragma: no cover
+            failed = True
             print(f"{name},-1,FAILED {type(e).__name__}: {e}")
+    if failed and args.smoke:
+        raise SystemExit(1)  # CI visibility: smoke benches must run clean
 
 
 if __name__ == "__main__":

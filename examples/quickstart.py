@@ -44,6 +44,23 @@ def main():
     res = simulate_conv(layer, sparsity=0.66, sample_groups=1, max_t=96)
     print(f"conv layer projection: {res.speedup:.2f}x over the dense accelerator")
 
+    # 5. The repro.runtime execution API: pick a kernel backend, plan once,
+    #    execute block-sparse.  (`mode=` strings / ffn_kernel_mode are
+    #    deprecated shims over exactly this.)
+    from repro import runtime
+
+    rt = runtime.Runtime(backend="interpret", bm=16, bk=32, bn=16)
+    a = (rng.standard_normal((64, 128)).astype(np.float32)
+         * (rng.random((4, 4)) < 0.5).repeat(16, 0).repeat(32, 1))
+    b = rng.standard_normal((128, 64)).astype(np.float32)
+    plan = rt.plan(jnp.asarray(a), key="demo")  # a first-class SparsityPlan
+    y = rt.matmul(jnp.asarray(a), jnp.asarray(b), plan=plan)
+    print(f"runtime[{rt.backend}]: plan skips {plan.skipped_fraction():.0%} of "
+          f"blocks; |err| = {float(abs(y - jnp.asarray(a) @ jnp.asarray(b)).max()):.1e}")
+    with runtime.use(rt):  # ambient form: model code resolves it implicitly
+        print(f"ambient runtime -> {runtime.resolve().backend}; "
+              f"plan cache {rt.plan_cache.stats()}")
+
 
 if __name__ == "__main__":
     main()

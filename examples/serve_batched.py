@@ -1,6 +1,12 @@
 """Batched serving example: prefill a batch of prompts, decode new tokens.
 
-  PYTHONPATH=src python examples/serve_batched.py --arch qwen3-4b --new 16
+  PYTHONPATH=src python examples/serve_batched.py --arch qwen3-4b --new 16 \
+      --backend dense
+
+Execution policy (kernel backend, block geometry, plan cache) is one
+``repro.runtime.Runtime`` passed to ``generate``; under a sparse backend the
+LM-head SparsityPlan is computed at prefill and cache-hit on every decode
+step.
 """
 import argparse
 import time
@@ -8,6 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import runtime as rtm
 from repro.configs import get_config, reduce_config
 from repro.models import model as M
 from repro.models.common import init_params
@@ -21,21 +28,25 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--backend", default="dense", choices=rtm.available_backends())
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch))  # reduced config on CPU
+    rt = rtm.Runtime(backend=args.backend, bm=args.batch, bk=16, bn=16)
     params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
     )
     t0 = time.time()
     out = generate(
-        params, cfg, prompts, max_new=args.new, temperature=args.temperature
+        params, cfg, prompts, max_new=args.new, temperature=args.temperature, rt=rt
     )
     dt = time.time() - t0
     toks = args.batch * args.new
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} new={args.new}")
     print(f"generated {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s on 1 CPU core)")
+    pc = rt.plan_cache.stats()
+    print(f"backend={rt.backend} plan cache: {pc['hits']} hits / {pc['misses']} misses")
     for i in range(min(args.batch, 2)):
         print(f"  seq{i}: {out[i].tolist()}")
 

@@ -1,3 +1,8 @@
-"""Pallas TPU kernels (validated in interpret mode on CPU)."""
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+Backend selection lives in ``repro.runtime`` (the ``mode=`` kwargs on
+``repro.kernels.ops`` are deprecation shims over it).
+"""
 from repro.kernels.tensordash_spmm import plan_blocks, tensordash_matmul, tensordash_matmul_planned
 from repro.kernels.block_mask import block_zero_mask
+from repro.kernels.ref import tensordash_matmul_ref

@@ -1,22 +1,18 @@
-"""Jit'd public wrappers around the TensorDash kernels.
+"""Public wrappers around the TensorDash kernels.
 
-``mode`` selects the execution path so the same model code serves every
-runtime in this repo:
-
-* ``"dense"``      — plain XLA matmul (used by the multi-pod dry-run: the
-                     container's CPU backend cannot lower TPU Pallas).
-* ``"pallas"``     — the TPU kernel (target hardware).
-* ``"interpret"``  — the TPU kernel executed in Pallas interpret mode on CPU
-                     (correctness validation; used by the kernel test sweeps).
+.. deprecated::
+    The ``mode=`` string kwarg is a deprecation shim.  Execution policy now
+    lives in :class:`repro.runtime.Runtime` (backend registry + block
+    geometry + plan cache); pass ``runtime=`` explicitly or install one with
+    ``with repro.runtime.use(rt):``.  ``mode=`` strings map 1:1 onto backend
+    names (``"dense" | "pallas" | "interpret" | "reference"``) and will be
+    removed after one release.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import ref
+from repro import runtime as rtm
 from repro.kernels.tensordash_spmm import (
     plan_blocks,
     tensordash_matmul,
@@ -31,29 +27,37 @@ __all__ = [
     "tensordash_matmul_planned",
 ]
 
+_GEOM_DEFAULTS = (128, 512, 128)
 
-def matmul(a, b, *, mode: str = "dense", bm: int = 128, bk: int = 512, bn: int = 128):
-    """``a @ b`` with the TensorDash block-sparse path when requested."""
-    if mode == "dense":
-        return ref.matmul_ref(a, b)
-    if mode in ("pallas", "interpret"):
-        return tensordash_matmul(
-            a, b, bm=bm, bk=bk, bn=bn, interpret=(mode == "interpret")
+
+def _resolve(mode, runtime, bm, bk, bn):
+    if mode is not None:
+        warnings.warn(
+            "kernels.ops mode= is deprecated; pass runtime=repro.runtime.Runtime("
+            f"backend={mode!r}, ...) or use `with repro.runtime.use(rt):`",
+            DeprecationWarning,
+            stacklevel=3,
         )
-    raise ValueError(f"unknown mode: {mode}")
+        rt = rtm.Runtime(backend=mode)
+    else:
+        rt = rtm.resolve(runtime)
+    geom = {
+        k: v
+        for k, v in zip(("bm", "bk", "bn"), (bm, bk, bn))
+        if v is not None
+    }
+    return rt.replace(**geom) if geom else rt
 
 
-def sparse_ffn(
-    x,
-    w1,
-    w2,
-    *,
-    activation: str = "relu",
-    mode: str = "dense",
-    bm: int = 128,
-    bk: int = 512,
-    bn: int = 128,
-):
+def matmul(a, b, *, mode: str | None = None, runtime: "rtm.Runtime | None" = None,
+           bm: int | None = None, bk: int | None = None, bn: int | None = None):
+    """``a @ b`` on the resolved runtime's kernel backend."""
+    return _resolve(mode, runtime, bm, bk, bn).matmul(a, b)
+
+
+def sparse_ffn(x, w1, w2, *, activation: str = "relu", mode: str | None = None,
+               runtime: "rtm.Runtime | None" = None,
+               bm: int | None = None, bk: int | None = None, bn: int | None = None):
     """FFN whose second matmul exploits the dynamic sparsity the first one's
     activation produced — the framework's main consumer of the kernel.
 
@@ -61,15 +65,6 @@ def sparse_ffn(
     paper's Eq. (1) activations are; the kernel converts that into skipped
     MXU blocks.  Token dimension(s) of ``x`` are flattened to rows.
     """
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    h = jnp.dot(x2, w1, preferred_element_type=jnp.float32)
-    if activation == "relu":
-        h = jnp.maximum(h, 0.0)
-    elif activation == "squared_relu":
-        h = jnp.square(jnp.maximum(h, 0.0))
-    else:
-        raise ValueError(activation)
-    h = h.astype(x.dtype)
-    out = matmul(h, w2, mode=mode, bm=bm, bk=bk, bn=bn)
-    return out.reshape(*lead, w2.shape[-1])
+    return _resolve(mode, runtime, bm, bk, bn).sparse_ffn(
+        x, w1, w2, activation=activation
+    )

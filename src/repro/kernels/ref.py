@@ -1,6 +1,9 @@
 """Pure-jnp / numpy oracles for the Pallas kernels."""
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -27,6 +30,35 @@ def plan_blocks_ref(a: np.ndarray, bm: int, bk: int):
         row = eff + [eff[-1] if eff else 0] * (kb - len(eff))
         idx[mi] = row
     return nnz, idx
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype"))
+def tensordash_matmul_ref(nnz, idx, a, b, *, bm: int, bk: int, bn: int, out_dtype=None):
+    """Plan-driven block-sparse ``a @ b`` in pure jnp.
+
+    Executes exactly the schedule the Pallas kernel executes — per block row,
+    accumulate the planned K blocks in plan order into an fp32 accumulator —
+    so on CPU it is bit-identical to the kernel's interpret mode.  This is
+    both the parity oracle for the backend registry and the ``"reference"``
+    backend's executor.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, bm, bk, bn)
+    mb, kb = m // bm, k // bk
+    out_dtype = out_dtype or a.dtype
+    abl = a.reshape(mb, bm, kb, bk).transpose(0, 2, 1, 3)  # [Mb, Kb, bm, bk]
+    bbl = b.reshape(kb, bk, n)  # [Kb, bk, N]
+    rows = jnp.arange(mb)
+    acc = jnp.zeros((mb, bm, n), jnp.float32)
+    for j in range(kb):  # plan order, same accumulation sequence as the kernel
+        ki = idx[:, j]  # [Mb]
+        part = jnp.einsum(
+            "mik,mkn->min", abl[rows, ki], bbl[ki], preferred_element_type=jnp.float32
+        )
+        acc = acc + jnp.where((j < nnz)[:, None, None], part, 0.0)
+    return acc.reshape(m, n).astype(out_dtype)
 
 
 def sparse_ffn_ref(x, w1, w2, activation="relu"):

@@ -45,6 +45,12 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["plan_blocks", "tensordash_matmul_planned", "tensordash_matmul"]
 
 
+
+def _compiler_params(**kw):
+    # jax renamed TPUCompilerParams -> CompilerParams across releases
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kw)
+
 def plan_blocks(a: jax.Array, bm: int, bk: int):
     """Runtime block scheduler: compacted effectual K-block lists.
 
@@ -143,7 +149,7 @@ def tensordash_matmul_planned(
         functools.partial(_kernel, n_kb=kb),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -22,6 +22,7 @@ import traceback
 
 import jax
 
+from repro import runtime as rtm
 from repro.configs import ALL_ARCHS, SHAPES, cells, get_config, input_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import collective_bytes, roofline_terms
@@ -128,7 +129,9 @@ def _compile_once(cfg, arch: str, shape_name: str, multi_pod: bool, *, full: boo
     aparams = _with_shardings(aparams, ppspecs, mesh)
 
     t0 = time.time()
-    with mesh:
+    # the dry-run lowers on the dense backend (CPU cannot lower TPU Pallas);
+    # the ambient Runtime supplies the mesh to every model entry point
+    with mesh, rtm.use(rtm.Runtime(backend="dense", mesh=mesh)):
         if shape.kind == "train":
             abatch = input_specs(cfg, shape)
             bps = batch_pspecs(cfg, shape, mesh)

@@ -2,7 +2,12 @@
 stream with a fixed-capacity batch (static shapes; slot-recycling).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --requests 8 --new 8
+        --requests 8 --new 8 --backend interpret
+
+One ``repro.runtime.Runtime`` carries the whole execution policy (kernel
+backend, block geometry, mesh, plan cache); cache growth is layout-driven
+via ``rt.grow_caches`` instead of the old pad-the-axis-that-looks-like-a-
+sequence heuristic.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import runtime as rtm
 from repro.configs import get_config, reduce_config
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import model as M
@@ -27,6 +33,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new", type=int, default=8)
+    ap.add_argument("--backend", default="dense", choices=rtm.available_backends())
+    ap.add_argument("--block", type=int, nargs=3, metavar=("BM", "BK", "BN"),
+                    default=None, help="block geometry override")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -35,37 +44,34 @@ def main() -> None:
         cfg = reduce_config(cfg)
     else:
         mesh = make_production_mesh()
+    geom = dict(zip(("bm", "bk", "bn"), args.block)) if args.block else {}
+    rt = rtm.Runtime(backend=args.backend, mesh=mesh, **geom)
+    rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU) vs silent dense fallback
 
     params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
     key = jax.random.PRNGKey(1)
     done_tokens = 0
     t0 = time.time()
-    # waves of `batch` requests (static-shape batching)
-    for wave in range(0, args.requests, args.batch):
-        key, sub = jax.random.split(key)
-        prompts = jax.random.randint(sub, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-        logits, caches = prefill_step(params, cfg, {"tokens": prompts}, mesh=mesh)
-        # grow caches for the decode horizon
-        s = args.prompt_len
-
-        def grow(x):
-            if x.ndim >= 3 and s in x.shape[2:3]:
-                pad = [(0, 0)] * x.ndim
-                pad[2] = (0, args.new)
-                return jnp.pad(x, pad)
-            return x
-
-        caches = jax.tree.map(grow, caches)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        for i in range(args.new - 1):
-            logits, caches = decode_one(
-                params, cfg, caches, {"tokens": tok[:, None]}, jnp.int32(s + i), mesh=mesh
-            )
+    with rtm.use(rt):
+        # waves of `batch` requests (static-shape batching)
+        for wave in range(0, args.requests, args.batch):
+            key, sub = jax.random.split(key)
+            prompts = jax.random.randint(sub, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+            logits, caches = prefill_step(params, cfg, {"tokens": prompts})
+            s = args.prompt_len
+            caches = rt.grow_caches(cfg, caches, args.batch, s + args.new)
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        done_tokens += args.batch * args.new
-        print(f"wave {wave//args.batch}: {args.batch} requests x {args.new} tokens")
+            for i in range(args.new - 1):
+                logits, caches = decode_one(
+                    params, cfg, caches, {"tokens": tok[:, None]}, jnp.int32(s + i)
+                )
+                tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            done_tokens += args.batch * args.new
+            print(f"wave {wave//args.batch}: {args.batch} requests x {args.new} tokens")
     dt = time.time() - t0
+    plans = rt.plan_cache.stats()
     print(f"served {done_tokens} tokens in {dt:.1f}s ({done_tokens/dt:.1f} tok/s)")
+    print(f"backend={rt.backend} plan cache: {plans['hits']} hits / {plans['misses']} misses")
 
 
 if __name__ == "__main__":

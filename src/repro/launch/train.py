@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
+from repro import runtime as rtm
 from repro.checkpoint.manager import PreemptionGuard, latest_step, restore, save
 from repro.configs import get_config, reduce_config
 from repro.data.pipeline import SyntheticLM
@@ -43,6 +44,8 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--step-deadline", type=float, default=300.0,
                     help="straggler mitigation: abort+checkpoint if a step exceeds this")
+    ap.add_argument("--backend", default="dense", choices=rtm.available_backends(),
+                    help="kernel backend for the TensorDash sparse paths")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -52,18 +55,20 @@ def main() -> None:
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
     cfg = dataclasses.replace(cfg, remat=not args.smoke)
+    rt = rtm.Runtime(backend=args.backend, mesh=mesh)
+    rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU) vs silent dense fallback
 
     specs = M.param_specs(cfg)
     pspecs = param_pspecs(specs, mesh)
     shardings = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs)
-    with mesh:
+    with mesh, rtm.use(rt):
         params = jax.jit(
             lambda k: init_params(specs, k), out_shardings=shardings
         )(jax.random.PRNGKey(0))
         opt = init_opt_state(params)
         data = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
         ocfg = OptConfig(total_steps=max(args.steps, 100))
-        step_fn = jax.jit(make_train_step(cfg, ocfg, mesh, microbatches=args.microbatches))
+        step_fn = jax.jit(make_train_step(cfg, ocfg, microbatches=args.microbatches))
         guard = PreemptionGuard()
 
         start = 0

@@ -6,12 +6,18 @@
     prefill(params, cfg, batch)      -> (last logits, caches)
     decode_step(params, cfg, caches, batch, pos) -> (logits, caches)
     init_cache / abstract_cache      -> decode-state pytrees
+
+Execution policy resolves through ``repro.runtime`` (ambient ``Runtime`` or
+explicit ``mesh=``); under a sparse runtime the LM head replays a cached
+weight-side ``SparsityPlan`` (keyed per head array) so serving pays the
+planning cost once at prefill.  ``cfg.ffn_kernel_mode`` is deprecated.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro import runtime as rtm
 from repro.configs.base import ModelConfig
 from repro.models import hybrid as hyb
 from repro.models import ssm as ssm_mod
@@ -67,11 +73,12 @@ def _head(params, cfg: ModelConfig, h, mesh=None):
     if cfg.frontend == "audio":
         logits = constrain(jnp.einsum("bsd,kdv->bskv", h, params["lm_head"]), mesh, (DP, None, None, "model"))
     else:
-        logits = constrain(h @ params["lm_head"], mesh, (DP, None, "model"))
+        logits = constrain(tfm.head_matmul(cfg, h, params["lm_head"]), mesh, (DP, None, "model"))
     return softcap(logits, cfg.final_softcap)
 
 
 def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None):
+    mesh = rtm.active_mesh(mesh)
     if cfg.family in ("dense", "moe"):
         return tfm.forward(params, cfg, batch, mesh=mesh, probes=probes)
     h = constrain(tfm._embed_in(params, cfg, batch), mesh, (DP, None, None))
@@ -92,7 +99,7 @@ def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None):
 
 def loss_fn(params, cfg: ModelConfig, batch, mesh=None, probes=None):
     """Mean next-token cross-entropy (fp32 log-softmax)."""
-    logits = forward(params, cfg, batch, mesh=mesh, probes=probes).astype(jnp.float32)
+    logits = forward(params, cfg, batch, mesh=rtm.active_mesh(mesh), probes=probes).astype(jnp.float32)
     labels = batch["labels"]
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
@@ -100,6 +107,7 @@ def loss_fn(params, cfg: ModelConfig, batch, mesh=None, probes=None):
 
 
 def prefill(params, cfg: ModelConfig, batch, mesh=None):
+    mesh = rtm.active_mesh(mesh)
     if cfg.family in ("dense", "moe"):
         return tfm.prefill(params, cfg, batch, mesh=mesh)
     h = constrain(tfm._embed_in(params, cfg, batch), mesh, (DP, None, None))
@@ -119,6 +127,7 @@ def prefill(params, cfg: ModelConfig, batch, mesh=None):
 
 
 def decode_step(params, cfg: ModelConfig, caches, batch, pos, mesh=None):
+    mesh = rtm.active_mesh(mesh)
     if cfg.family in ("dense", "moe"):
         return tfm.decode_step(params, cfg, caches, batch, pos, mesh=mesh)
     h = constrain(tfm._embed_in(params, cfg, batch), mesh, (DP, None, None))

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import runtime as rtm
 from repro.models.common import ACTIVATIONS, Spec
 
 __all__ = ["MoEConfig", "moe_specs", "moe_ffn"]
@@ -206,8 +207,10 @@ def _moe_sharded(cfg: MoEConfig, ep_size: int, seq_sharded: bool, params, x2):
 
 
 def moe_ffn(params, cfg: MoEConfig, x, *, mesh=None, seq_sharded: bool = True):
-    """MoE FFN.  x [B, S, d].  With a mesh, runs expert-parallel via
-    shard_map; without one, the single-device reference path."""
+    """MoE FFN.  x [B, S, d].  With a mesh (explicit, or from the ambient
+    ``repro.runtime.Runtime``), runs expert-parallel via shard_map; without
+    one, the single-device reference path."""
+    mesh = rtm.active_mesh(mesh)
     b, s, d = x.shape
     shared = _shared_ffn(cfg, params["shared"], x) if cfg.num_shared_experts else 0.0
 

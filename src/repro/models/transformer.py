@@ -3,6 +3,11 @@
 One scanned homogeneous block keeps the HLO size independent of depth (the
 94-layer MoE compiles as fast as the 26-layer dense model); per-layer
 differences (Gemma-2 local/global alternation) ride along as scanned flags.
+
+Execution policy (kernel backend, block geometry, mesh) is resolved through
+``repro.runtime``: pass a mesh explicitly or install a ``Runtime`` with
+``with repro.runtime.use(rt):``.  The old ``cfg.ffn_kernel_mode`` string is
+deprecated and honoured only as a shim that builds a ``Runtime``.
 """
 from __future__ import annotations
 
@@ -12,8 +17,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import runtime as rtm
 from repro.configs.base import ModelConfig
-from repro.kernels import ops as kops
 from repro.models import attention as attn
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
@@ -36,6 +41,7 @@ __all__ = [
     "block_specs",
     "backbone_specs",
     "stack_specs",
+    "head_matmul",
     "forward",
     "prefill",
     "decode_step",
@@ -111,19 +117,22 @@ def mlp_specs(cfg: ModelConfig, d_ff: int) -> dict:
     }
 
 
-def mlp_fwd(params, cfg: ModelConfig, x, taps: dict | None = None, mesh=None):
+def mlp_fwd(params, cfg: ModelConfig, x, taps: dict | None = None, mesh=None, rt=None):
     act = ACTIVATIONS[cfg.activation]
+    rt = rtm.resolve(rt, cfg)
+    mesh = mesh if mesh is not None else rt.mesh
     if cfg.mlp_gated:
-        if cfg.ffn_kernel_mode != "dense" and cfg.activation == "relu":
+        if rt.wants_sparse and cfg.activation == "relu":
             # TensorDash kernel path: second matmul skips zero blocks
             lead = x.shape[:-1]
             h = act((x @ params["w_gate"])) * (x @ params["w_up"])
             if taps is not None:
                 taps["ffn_act"] = sps.measure(h)
-            out = kops.matmul(
-                h.reshape(-1, h.shape[-1]), params["w_down"], mode=cfg.ffn_kernel_mode
-            ).reshape(*lead, -1)
-            return out
+            h2 = h.reshape(-1, h.shape[-1])
+            if rt.supports_matmul(h2.shape, params["w_down"].shape):
+                return rt.matmul(h2, params["w_down"]).reshape(*lead, -1)
+            _warn_dense_fallback(rt, h2.shape, params["w_down"].shape)
+            return (h2 @ params["w_down"]).reshape(*lead, -1)
         h = act(x @ params["w_gate"]) * (x @ params["w_up"])
     else:
         h = act(x @ params["w_up"])
@@ -131,6 +140,42 @@ def mlp_fwd(params, cfg: ModelConfig, x, taps: dict | None = None, mesh=None):
     if taps is not None:
         taps["ffn_act"] = sps.measure(h)
     return h @ params["w_down"]
+
+
+def _warn_dense_fallback(rt, a_shape, b_shape):
+    # a sparse backend was requested but the geometry doesn't divide: say so
+    # instead of silently reporting sparse-labelled dense numbers (fires
+    # once per call site / trace)
+    import warnings
+
+    warnings.warn(
+        f"runtime backend {rt.backend!r} cannot run {tuple(a_shape)} @ "
+        f"{tuple(b_shape)} with blocks bm={rt.bm} bk={rt.bk} bn={rt.bn}; "
+        "falling back to dense XLA for this matmul",
+        RuntimeWarning,
+        stacklevel=3,
+    )
+
+
+def head_matmul(cfg: ModelConfig, h, lm_head):
+    """``h @ lm_head`` through the active runtime.
+
+    Under a sparse runtime (e.g. a block-pruned head), the weight-side plan
+    is computed once and replayed from the runtime's plan cache on every
+    subsequent call — prefill plans, decode steps cache-hit (the software
+    analogue of the paper's amortized backside scheduler, §3.7).  Weights
+    are static across a generation, so the replay is numerically exact; the
+    cache validates hits by array identity.
+    """
+    rt = rtm.resolve(cfg=cfg)
+    b, s, d = h.shape
+    h2 = h.reshape(b * s, d)
+    if rt.wants_sparse:
+        if rt.supports_matmul(h2.shape, lm_head.shape, side="B"):
+            out = rt.matmul(h2, lm_head, plan_key=("lm_head", id(lm_head)), side="B")
+            return out.reshape(b, s, -1)
+        _warn_dense_fallback(rt, h2.shape, lm_head.shape)
+    return h @ lm_head
 
 
 def block_specs(cfg: ModelConfig, *, moe: bool) -> dict:
@@ -279,6 +324,7 @@ def _scan_layers(cfg, body, h, stacked_params, flags):
 
 def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None):
     """Full-sequence forward -> logits (train / eval)."""
+    mesh = rtm.active_mesh(mesh)
     h = constrain(_embed_in(params, cfg, batch), mesh, (DP, _seq_ax(cfg), None))
     s = h.shape[1]
     positions = _positions(cfg, batch, s)
@@ -296,7 +342,7 @@ def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None):
     if cfg.frontend == "audio":
         logits = constrain(jnp.einsum("bsd,kdv->bskv", h, params["lm_head"]), mesh, (DP, None, None, "model"))
     else:
-        logits = constrain(h @ params["lm_head"], mesh, (DP, None, "model"))
+        logits = constrain(head_matmul(cfg, h, params["lm_head"]), mesh, (DP, None, "model"))
     return softcap(logits, cfg.final_softcap)
 
 
@@ -320,6 +366,7 @@ def init_layer_caches(cfg: ModelConfig, batch: int, max_len: int):
 
 def decode_step(params, cfg: ModelConfig, caches, batch, pos, mesh=None):
     """One-token decode against pre-filled caches; returns (logits, caches)."""
+    mesh = rtm.active_mesh(mesh)
     h = constrain(_embed_in(params, cfg, batch), mesh, (DP, _seq_ax(cfg), None))
 
     def body(carry, inp):
@@ -342,13 +389,14 @@ def decode_step(params, cfg: ModelConfig, caches, batch, pos, mesh=None):
     if cfg.frontend == "audio":
         logits = jnp.einsum("bsd,kdv->bskv", h, params["lm_head"])
     else:
-        logits = h @ params["lm_head"]
+        logits = head_matmul(cfg, h, params["lm_head"])
     return softcap(logits, cfg.final_softcap), new_caches
 
 
 def prefill(params, cfg: ModelConfig, batch, mesh=None):
     """Prefill: forward over the prompt, returning last-token logits and the
     filled KV caches (ready for decode at pos = seq_len)."""
+    mesh = rtm.active_mesh(mesh)
     h = constrain(_embed_in(params, cfg, batch), mesh, (DP, _seq_ax(cfg), None))
     s = h.shape[1]
     positions = _positions(cfg, batch, s)
@@ -402,5 +450,5 @@ def prefill(params, cfg: ModelConfig, batch, mesh=None):
     if cfg.frontend == "audio":
         logits = jnp.einsum("bsd,kdv->bskv", h, params["lm_head"])
     else:
-        logits = h @ params["lm_head"]
+        logits = head_matmul(cfg, h, params["lm_head"])
     return softcap(logits, cfg.final_softcap), caches

@@ -1,0 +1,47 @@
+"""``repro.runtime`` — the unified execution API.
+
+    from repro import runtime
+    from repro.runtime import Runtime
+
+    rt = Runtime(backend="interpret", bm=16, bk=32, bn=16)
+    y = rt.matmul(a, b)                      # explicit-pass style
+    with runtime.use(rt):                    # ambient style
+        logits = model.forward(params, cfg, batch)
+    print(rt.plan(a).stats(), rt.plan_cache.stats())
+
+Replaces the deprecated ``mode=`` kwargs on ``repro.kernels.ops``, the
+``ModelConfig.ffn_kernel_mode`` string and hand-threaded ``mesh=`` state.
+"""
+from repro.runtime.backends import (
+    BackendCapabilityError,
+    KernelBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.runtime.plan import PlanCache, SparsityPlan, plan_operand
+from repro.runtime.runtime import (
+    Runtime,
+    active_mesh,
+    current,
+    default_runtime,
+    resolve,
+    use,
+)
+
+__all__ = [
+    "Runtime",
+    "use",
+    "current",
+    "resolve",
+    "active_mesh",
+    "default_runtime",
+    "KernelBackend",
+    "BackendCapabilityError",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "SparsityPlan",
+    "PlanCache",
+    "plan_operand",
+]

@@ -1,0 +1,202 @@
+"""Pluggable kernel backends behind one registry.
+
+Each backend declares how to execute ``matmul`` (and its plan-driven form)
+plus its own capability checks, so model code never string-dispatches on a
+``mode=`` kwarg: it asks the active :class:`~repro.runtime.Runtime` for its
+backend and calls it.  Adding a backend — a bf16 Pallas variant per the
+paper's bfloat16 evaluation, a GPU kernel — is a ``register_backend`` call,
+with no edits to ``models/``, ``serve/`` or ``train/``.
+
+Built-ins:
+
+* ``"dense"``      — plain XLA matmul; with a plan, the schedule-faithful
+                     pure-jnp executor (bit-identical to the kernel).
+* ``"reference"``  — CPU block-sparse reference: always plans + executes
+                     the block schedule in pure jnp (no Pallas involved).
+* ``"pallas"``     — the TPU Pallas kernel (requires a TPU backend).
+* ``"interpret"``  — the same kernel in Pallas interpret mode on CPU
+                     (correctness validation; CI parity sweeps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.tensordash_spmm import tensordash_matmul_planned
+from repro.runtime.plan import SparsityPlan, plan_operand
+
+__all__ = [
+    "KernelBackend",
+    "BackendCapabilityError",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+
+class BackendCapabilityError(ValueError):
+    """The requested backend cannot run this op (platform / geometry)."""
+
+
+class KernelBackend:
+    """Backend interface: capability checks + (planned) matmul execution."""
+
+    name: str = "?"
+    #: whether ``matmul`` without a plan exploits block sparsity at all
+    sparse: bool = True
+
+    # -- capabilities -----------------------------------------------------
+    def check_platform(self) -> None:
+        """Raise :class:`BackendCapabilityError` if unavailable here."""
+
+    def check_geometry(self, m: int, k: int, n: int, *, bm: int, bk: int, bn: int) -> None:
+        if m % bm or k % bk or n % bn:
+            raise BackendCapabilityError(
+                f"{self.name}: shapes ({m},{k})x({k},{n}) not divisible by "
+                f"blocks bm={bm} bk={bk} bn={bn}"
+            )
+
+    def supports(self, m: int, k: int, n: int, *, bm: int, bk: int, bn: int) -> bool:
+        try:
+            self.check_platform()
+            self.check_geometry(m, k, n, bm=bm, bk=bk, bn=bn)
+            return True
+        except BackendCapabilityError:
+            return False
+
+    # -- execution --------------------------------------------------------
+    def matmul(self, a, b, *, bm: int, bk: int, bn: int, out_dtype=None):
+        raise NotImplementedError
+
+    def matmul_planned(self, plan: SparsityPlan, a, b, *, bn: int, out_dtype=None):
+        raise NotImplementedError
+
+
+class DenseBackend(KernelBackend):
+    """Plain XLA matmul (multi-pod dry-run; CPU fallback).
+
+    Given a plan it still honours the schedule (pure-jnp executor), which is
+    what makes bit-exact cross-backend parity testable.
+    """
+
+    name = "dense"
+    sparse = False
+
+    def check_geometry(self, m, k, n, *, bm, bk, bn):
+        pass  # dense XLA has no block-geometry constraints
+
+    def matmul(self, a, b, *, bm, bk, bn, out_dtype=None):
+        del bm, bk, bn
+        out = ref.matmul_ref(a, b)
+        return out.astype(out_dtype) if out_dtype else out
+
+    def matmul_planned(self, plan, a, b, *, bn, out_dtype=None):
+        return ref.tensordash_matmul_ref(
+            plan.nnz, plan.idx, a, b, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype
+        )
+
+
+class ReferenceBackend(KernelBackend):
+    """CPU block-sparse reference: plan + pure-jnp schedule execution."""
+
+    name = "reference"
+
+    def matmul(self, a, b, *, bm, bk, bn, out_dtype=None):
+        self.check_geometry(a.shape[0], a.shape[1], b.shape[1], bm=bm, bk=bk, bn=bn)
+        plan = plan_operand(a, bm, bk)
+        return self.matmul_planned(plan, a, b, bn=bn, out_dtype=out_dtype)
+
+    def matmul_planned(self, plan, a, b, *, bn, out_dtype=None):
+        return ref.tensordash_matmul_ref(
+            plan.nnz, plan.idx, a, b, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype
+        )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _pallas_planned(interpret, bm, bk, bn, out_dtype, nnz, idx, a, b):
+    """Planned Pallas matmul with a dense backward.
+
+    ``pl.pallas_call`` defines no differentiation rule, so training through
+    the sparse FFN / LM head would crash.  The dense VJP is *exact* here:
+    the plan (built from ``a``) only elides all-zero blocks, so the forward
+    equals the dense product and d(a@b) = (g @ b.T, a.T @ g) everywhere.
+    """
+    return tensordash_matmul_planned(
+        nnz, idx, a, b, bm=bm, bk=bk, bn=bn, interpret=interpret, out_dtype=out_dtype
+    )
+
+
+def _pallas_planned_fwd(interpret, bm, bk, bn, out_dtype, nnz, idx, a, b):
+    out = _pallas_planned(interpret, bm, bk, bn, out_dtype, nnz, idx, a, b)
+    return out, (nnz, idx, a, b)
+
+
+def _pallas_planned_bwd(interpret, bm, bk, bn, out_dtype, res, g):
+    nnz, idx, a, b = res
+    g32 = g.astype(jnp.float32)
+    da = jnp.dot(g32, b.astype(jnp.float32).T).astype(a.dtype)
+    db = jnp.dot(a.astype(jnp.float32).T, g32).astype(b.dtype)
+    zero = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int plan metadata
+    return zero(nnz), zero(idx), da, db
+
+
+_pallas_planned.defvjp(_pallas_planned_fwd, _pallas_planned_bwd)
+
+
+class PallasBackend(KernelBackend):
+    """The TensorDash Pallas TPU kernel (optionally in interpret mode)."""
+
+    def __init__(self, name: str, interpret: bool):
+        self.name = name
+        self.interpret = interpret
+
+    def check_platform(self):
+        if not self.interpret and jax.default_backend() != "tpu":
+            raise BackendCapabilityError(
+                f"{self.name}: requires a TPU backend (got "
+                f"{jax.default_backend()!r}); use 'interpret' on CPU"
+            )
+
+    def matmul(self, a, b, *, bm, bk, bn, out_dtype=None):
+        self.check_platform()
+        self.check_geometry(a.shape[0], a.shape[1], b.shape[1], bm=bm, bk=bk, bn=bn)
+        plan = plan_operand(a, bm, bk)
+        return self.matmul_planned(plan, a, b, bn=bn, out_dtype=out_dtype)
+
+    def matmul_planned(self, plan, a, b, *, bn, out_dtype=None):
+        self.check_platform()
+        return _pallas_planned(
+            self.interpret, plan.bm, plan.bk, bn, out_dtype, plan.nnz, plan.idx, a, b
+        )
+
+
+_REGISTRY: dict[str, KernelBackend] = {}
+
+
+def register_backend(backend: KernelBackend) -> KernelBackend:
+    """Register (or replace) a backend under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> KernelBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+register_backend(DenseBackend())
+register_backend(ReferenceBackend())
+register_backend(PallasBackend("pallas", interpret=False))
+register_backend(PallasBackend("interpret", interpret=True))

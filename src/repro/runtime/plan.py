@@ -1,0 +1,160 @@
+"""First-class block-sparsity plans + a keyed plan cache.
+
+A :class:`SparsityPlan` promotes the raw ``(nnz, idx)`` pair produced by
+``repro.kernels.tensordash_spmm.plan_blocks`` to an object that carries its
+own block geometry, the shape/dtype of the operand it was planned for, and
+measured density statistics.  It is the software analogue of the paper's
+hardware scheduler output (the compacted effectual-work stream, §3.1): the
+schedule is *data*, separable from execution, so it can be produced once and
+replayed many times.
+
+:class:`PlanCache` is the amortization mechanism (paper §3.7, the backside
+scheduler): a keyed cache so a plan computed once — e.g. at serving prefill
+for a static sparse weight — is reused across every subsequent decode step
+instead of being recomputed per token.  Cache hits are validated by operand
+*identity* (``entry.source is operand``), so a hit is always numerically
+exact: the plan can only be replayed against the very array it was computed
+from.  Plans are never cached for traced values (inside ``jit``/``scan``
+the plan is part of the traced program and caching it would leak tracers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SparsityPlan", "PlanCache", "plan_operand"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityPlan:
+    """Compacted effectual-block schedule for one 2-D operand.
+
+    ``idx[r, :nnz[r]]`` lists (ascending) the effectual K-block indices of
+    block-row ``r`` of the planned operand; the tail repeats the last
+    effectual index so skipped grid steps revisit a resident block.
+
+    ``side`` records which matmul operand the plan describes: ``"A"`` plans
+    the left operand ``a [M, K]`` with ``(bm, bk)`` blocks; ``"B"`` plans
+    the *transposed* right operand ``b.T [N, K]`` (weight sparsity), so the
+    planned block rows run over N.
+    """
+
+    nnz: Any  # [Rb] int32
+    idx: Any  # [Rb, Kb] int32
+    bm: int  # block rows of the planned operand
+    bk: int  # block size along the contraction dim
+    shape: tuple[int, int]  # shape of the planned operand (post-transpose for B)
+    dtype: Any
+    side: str = "A"
+
+    @property
+    def block_rows(self) -> int:
+        return self.shape[0] // self.bm
+
+    @property
+    def k_blocks(self) -> int:
+        return self.shape[1] // self.bk
+
+    @property
+    def total_blocks(self) -> int:
+        return self.block_rows * self.k_blocks
+
+    def effectual_blocks(self) -> int:
+        """Number of not-all-zero blocks (concrete plans only)."""
+        return int(jnp.sum(self.nnz))
+
+    def density(self) -> float:
+        """Fraction of blocks that carry effectual work."""
+        return self.effectual_blocks() / max(self.total_blocks, 1)
+
+    def skipped_fraction(self) -> float:
+        return 1.0 - self.density()
+
+    def stats(self) -> dict:
+        return {
+            "shape": self.shape,
+            "block": (self.bm, self.bk),
+            "side": self.side,
+            "blocks": self.total_blocks,
+            "effectual": self.effectual_blocks(),
+            "density": self.density(),
+        }
+
+
+def plan_operand(a, bm: int, bk: int, *, side: str = "A") -> SparsityPlan:
+    """Plan a 2-D operand (already transposed for ``side="B"``)."""
+    from repro.kernels.tensordash_spmm import plan_blocks  # local: keep import light
+
+    m, k = a.shape
+    if m % bm or k % bk:
+        raise ValueError(f"operand {a.shape} not divisible by block ({bm}, {bk})")
+    nnz, idx = plan_blocks(a, bm, bk)
+    return SparsityPlan(
+        nnz=nnz, idx=idx, bm=bm, bk=bk, shape=(m, k), dtype=a.dtype, side=side
+    )
+
+
+class PlanCache:
+    """Keyed SparsityPlan cache with identity-validated hits.
+
+    Entries are keyed by ``(key, side, shape, dtype, bm, bk)`` and store the
+    source operand alongside the plan.  A lookup only hits when the stored
+    source *is* the queried array (same buffer), which makes reuse exact by
+    construction — a rebound key (new weights under the same name) is a miss
+    and transparently replaces the stale entry.
+    """
+
+    def __init__(self, capacity: int | None = None):
+        self._entries: dict[tuple, tuple[Any, SparsityPlan]] = {}
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def _key(self, key, a, bm: int, bk: int, side: str) -> tuple:
+        return (key, side, tuple(a.shape), str(a.dtype), bm, bk)
+
+    def lookup(self, key, a, bm: int, bk: int, side: str = "A") -> SparsityPlan | None:
+        entry = self._entries.get(self._key(key, a, bm, bk, side))
+        if entry is not None and entry[0] is a:
+            self.hits += 1
+            return entry[1]
+        return None
+
+    def store(self, key, a, plan: SparsityPlan) -> SparsityPlan:
+        self.misses += 1
+        k = self._key(key, a, plan.bm, plan.bk, plan.side)
+        # rebinding an existing key replaces in place — never evicts a
+        # live unrelated entry
+        if (
+            self.capacity is not None
+            and k not in self._entries
+            and len(self._entries) >= self.capacity
+        ):
+            self._entries.pop(next(iter(self._entries)))  # FIFO eviction
+        self._entries[k] = (a, plan)
+        return plan
+
+    def get_or_build(self, key, a, bm: int, bk: int, *, side: str = "A") -> SparsityPlan:
+        if isinstance(a, jax.core.Tracer):
+            # Inside a trace the plan is part of the program; never cache.
+            operand = a.T if side == "B" else a
+            return plan_operand(operand, bm, bk, side=side)
+        plan = self.lookup(key, a, bm, bk, side)
+        if plan is not None:
+            return plan
+        operand = a.T if side == "B" else a
+        return self.store(key, a, plan_operand(operand, bm, bk, side=side))
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits, "misses": self.misses}
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0

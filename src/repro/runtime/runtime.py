@@ -1,0 +1,228 @@
+"""The single front door for execution policy.
+
+A frozen :class:`Runtime` bundles everything that used to be ambient
+string-and-kwarg state — the kernel backend name, block geometry
+``bm/bk/bn``, the device mesh, a plan-cache handle and the dtype policy —
+into one value that is either passed explicitly or installed as the ambient
+runtime with ``with runtime.use(rt):``.
+
+Resolution precedence (``resolve``):
+
+1. an explicitly passed ``Runtime``;
+2. the ambient runtime installed by :func:`use`;
+3. the deprecated ``ModelConfig.ffn_kernel_mode`` shim;
+4. the process-wide default (dense backend, no mesh).
+
+The old entry points (``mode=`` kwargs on ``repro.kernels.ops``,
+``ModelConfig.ffn_kernel_mode``, hand-threaded ``mesh=``) remain as thin
+deprecation shims for one release; new code should construct a ``Runtime``.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.backends import KernelBackend, get_backend
+from repro.runtime.plan import PlanCache, SparsityPlan, plan_operand
+
+__all__ = [
+    "Runtime",
+    "use",
+    "current",
+    "resolve",
+    "active_mesh",
+    "default_runtime",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution policy: backend + block geometry + mesh + plan cache.
+
+    ``bm/bk/bn`` are the block-sparse tile geometry (defaults sized for the
+    TPU MXU; tests shrink them).  ``plan_cache`` is carried by handle so a
+    serving engine's plans survive across steps; it is excluded from
+    equality so two runtimes with the same policy compare equal.
+    """
+
+    backend: str = "dense"
+    bm: int = 128
+    bk: int = 512
+    bn: int = 128
+    mesh: Any = None
+    plan_cache: PlanCache = dataclasses.field(
+        default_factory=PlanCache, compare=False, repr=False
+    )
+    compute_dtype: Any = None  # None: keep operand dtype
+    # kernel accumulator precision; every current backend accumulates in
+    # fp32 (validated in matmul) — a bf16-accumulate Pallas variant per the
+    # paper's §bfloat16 evaluation would register a backend honouring this
+    accum_dtype: Any = jnp.float32
+
+    # -- construction ------------------------------------------------------
+    def replace(self, **kw) -> "Runtime":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def kernel(self) -> KernelBackend:
+        return get_backend(self.backend)
+
+    @property
+    def wants_sparse(self) -> bool:
+        """Whether this runtime's backend exploits block sparsity."""
+        return self.kernel.sparse
+
+    # -- scoping -----------------------------------------------------------
+    def use(self):
+        """``with rt.use():`` — install as the ambient runtime."""
+        return use(self)
+
+    # -- planning ----------------------------------------------------------
+    def plan(self, a, *, key=None, side: str = "A") -> SparsityPlan:
+        """Plan operand ``a`` (``side="B"``: plan ``a.T`` — weight side).
+
+        With a ``key`` the plan is served from :attr:`plan_cache`; hits are
+        identity-validated, so reuse is exact (see ``repro.runtime.plan``).
+        """
+        bm = self.bm if side == "A" else self.bn
+        if key is None:
+            operand = a.T if side == "B" else a
+            return plan_operand(operand, bm, self.bk, side=side)
+        return self.plan_cache.get_or_build(key, a, bm, self.bk, side=side)
+
+    def supports_matmul(self, a_shape, b_shape, *, side: str = "A") -> bool:
+        """Can the backend run ``a @ b`` block-sparse at this geometry?"""
+        m, k = a_shape
+        n = b_shape[1]
+        if side == "B":
+            # executed as (b.T @ a.T).T: planned rows over N, lanes over M
+            return self.kernel.supports(n, k, m, bm=self.bn, bk=self.bk, bn=self.bm)
+        return self.kernel.supports(m, k, n, bm=self.bm, bk=self.bk, bn=self.bn)
+
+    # -- execution ---------------------------------------------------------
+    def matmul(self, a, b, *, plan: SparsityPlan | None = None, plan_key=None, side: str = "A"):
+        """``a @ b`` on this runtime's backend.
+
+        ``side="A"`` (default) exploits dynamic sparsity of ``a``;
+        ``side="B"`` exploits (static, typically weight) sparsity of ``b``,
+        executed through the same kernel as ``(b.T @ a.T).T``.  ``plan_key``
+        routes planning through the keyed cache — the serving decode loop's
+        amortization path.
+        """
+        if jnp.dtype(self.accum_dtype) != jnp.dtype(jnp.float32):
+            raise NotImplementedError(
+                f"accum_dtype={self.accum_dtype}: all registered backends "
+                "accumulate in float32"
+            )
+        if self.compute_dtype is not None:
+            a = a.astype(self.compute_dtype)
+            b = b.astype(self.compute_dtype)
+        kernel = self.kernel
+        if not kernel.sparse and plan is None and plan_key is None:
+            return kernel.matmul(a, b, bm=self.bm, bk=self.bk, bn=self.bn)
+        if side == "B":
+            if plan is None:
+                plan = self.plan(b, key=plan_key, side="B")
+            out_t = kernel.matmul_planned(plan, b.T, a.T, bn=self.bm, out_dtype=a.dtype)
+            return out_t.T
+        if plan is None and plan_key is None:
+            return kernel.matmul(a, b, bm=self.bm, bk=self.bk, bn=self.bn)
+        if plan is None:
+            plan = self.plan(a, key=plan_key)
+        return kernel.matmul_planned(plan, a, b, bn=self.bn, out_dtype=a.dtype)
+
+    def sparse_ffn(self, x, w1, w2, *, activation: str = "relu"):
+        """FFN whose second matmul exploits the activation sparsity the
+        first one produced (the framework's main kernel consumer)."""
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        h = jnp.dot(x2, w1, preferred_element_type=jnp.float32)
+        if activation == "relu":
+            h = jnp.maximum(h, 0.0)
+        elif activation == "squared_relu":
+            h = jnp.square(jnp.maximum(h, 0.0))
+        else:
+            raise ValueError(activation)
+        h = h.astype(x.dtype)
+        out = self.matmul(h, w2)
+        return out.reshape(*lead, w2.shape[-1])
+
+    # -- serving cache layout ---------------------------------------------
+    def grow_caches(self, cfg, caches, batch: int, max_len: int):
+        """Grow prefill-time decode caches to ``max_len`` by layout, not by
+        shape-guessing: allocate the model's canonical ``max_len`` cache and
+        write the prefill values in at the origin of every leaf.  Replaces
+        the brittle ``x.shape[2] == seq_len`` heuristic, which misfired when
+        batch/sequence/feature dims collided."""
+        from repro.models import model as M  # local: avoid import cycle
+
+        target = M.init_cache(cfg, batch, max_len)
+
+        def place(full, part):
+            if full.shape == part.shape:
+                return part.astype(full.dtype)
+            if len(full.shape) != len(part.shape):
+                raise ValueError(f"cache rank mismatch: {part.shape} -> {full.shape}")
+            return jax.lax.dynamic_update_slice(
+                full, part.astype(full.dtype), (0,) * len(full.shape)
+            )
+
+        return jax.tree.map(place, target, caches)
+
+
+_DEFAULT = Runtime()
+_ACTIVE: contextvars.ContextVar[Runtime | None] = contextvars.ContextVar(
+    "repro_runtime", default=None
+)
+
+
+@contextlib.contextmanager
+def use(rt: Runtime):
+    """Install ``rt`` as the ambient runtime for the enclosed block."""
+    token = _ACTIVE.set(rt)
+    try:
+        yield rt
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current() -> Runtime | None:
+    """The ambient runtime installed by :func:`use`, or ``None``."""
+    return _ACTIVE.get()
+
+
+def default_runtime() -> Runtime:
+    return _DEFAULT
+
+
+@functools.lru_cache(maxsize=None)
+def _shim_runtime(mode: str) -> Runtime:
+    """One Runtime per deprecated mode string, so its plan cache persists."""
+    return Runtime(backend=mode)
+
+
+def resolve(rt: Runtime | None = None, cfg=None) -> Runtime:
+    """Resolve the effective runtime: explicit > ambient > cfg shim > default."""
+    if rt is not None:
+        return rt
+    ambient = _ACTIVE.get()
+    if ambient is not None:
+        return ambient
+    mode = getattr(cfg, "ffn_kernel_mode", "dense") if cfg is not None else "dense"
+    if mode != "dense":
+        return _shim_runtime(mode)
+    return _DEFAULT
+
+
+def active_mesh(mesh=None):
+    """Explicit mesh if given, else the ambient runtime's mesh (if any)."""
+    if mesh is not None:
+        return mesh
+    ambient = _ACTIVE.get()
+    return ambient.mesh if ambient is not None else None

@@ -3,6 +3,19 @@
 ``prefill_step`` and ``decode_step`` are the two programs the dry-run lowers
 for the inference shapes (``prefill_32k``; ``decode_32k``/``long_500k`` =
 one new token against a seq_len cache).
+
+Execution policy flows through one :class:`repro.runtime.Runtime`:
+
+* the mesh comes from ``rt.mesh`` (or the ambient runtime) instead of being
+  hand-threaded through every call;
+* decode caches grow by *layout* — the model's canonical ``max_len`` cache
+  plus a ``dynamic_update_slice`` — not by guessing which axis looks like a
+  sequence axis;
+* under a sparse backend, the LM-head ``SparsityPlan`` is computed once at
+  prefill and replayed from ``rt.plan_cache`` on every decode step (the
+  paper's amortized backside scheduler, §3.7).
+
+The old ``mesh=`` kwargs remain as explicit overrides.
 """
 from __future__ import annotations
 
@@ -11,6 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import runtime as rtm
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 
@@ -19,12 +33,12 @@ __all__ = ["prefill_step", "decode_one", "generate"]
 
 def prefill_step(params, cfg: ModelConfig, batch, mesh=None):
     """Prompt -> (last-position logits, filled caches)."""
-    return M.prefill(params, cfg, batch, mesh=mesh)
+    return M.prefill(params, cfg, batch, mesh=rtm.active_mesh(mesh))
 
 
 def decode_one(params, cfg: ModelConfig, caches, step_batch, pos, mesh=None):
     """One token for every sequence in the batch."""
-    return M.decode_step(params, cfg, caches, step_batch, pos, mesh=mesh)
+    return M.decode_step(params, cfg, caches, step_batch, pos, mesh=rtm.active_mesh(mesh))
 
 
 def _sample(logits, key, temperature: float):
@@ -43,28 +57,29 @@ def generate(
     temperature: float = 0.0,
     seed: int = 0,
     mesh=None,
+    rt: "rtm.Runtime | None" = None,
 ):
-    """End-to-end batched generation (LM archs).  prompt [B, S] int32."""
+    """End-to-end batched generation (LM archs).  prompt [B, S] int32.
+
+    ``rt`` selects the execution policy (backend, geometry, mesh, plan
+    cache); when omitted it resolves ambient -> config shim -> dense.
+    """
+    rt = rtm.resolve(rt, cfg)
+    if mesh is not None:
+        rt = rt.replace(mesh=mesh)
     b, s = prompt_tokens.shape
     max_len = max_len or (s + max_new)
-    logits, caches = prefill_step(params, cfg, {"tokens": prompt_tokens}, mesh=mesh)
-    # grow caches to max_len
-    def grow(x):
-        if x.ndim >= 3 and x.shape[2] == s and x.shape[1] == b:  # [L, B, S, ...]
-            pad = [(0, 0)] * x.ndim
-            pad[2] = (0, max_len - s)
-            return jnp.pad(x, pad)
-        return x
-
-    caches = jax.tree.map(grow, caches)
-    key = jax.random.PRNGKey(seed)
-    tok = _sample(logits[:, -1].astype(jnp.float32), key, temperature).astype(jnp.int32)
-    out = [tok]
-    for i in range(max_new - 1):
-        key, sub = jax.random.split(key)
-        logits, caches = decode_one(
-            params, cfg, caches, {"tokens": tok[:, None]}, jnp.int32(s + i), mesh=mesh
-        )
-        tok = _sample(logits[:, -1].astype(jnp.float32), sub, temperature).astype(jnp.int32)
-        out.append(tok)
+    with rtm.use(rt):
+        logits, caches = prefill_step(params, cfg, {"tokens": prompt_tokens})
+        caches = rt.grow_caches(cfg, caches, b, max_len)
+        key = jax.random.PRNGKey(seed)
+        tok = _sample(logits[:, -1].astype(jnp.float32), key, temperature).astype(jnp.int32)
+        out = [tok]
+        for i in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            logits, caches = decode_one(
+                params, cfg, caches, {"tokens": tok[:, None]}, jnp.int32(s + i)
+            )
+            tok = _sample(logits[:, -1].astype(jnp.float32), sub, temperature).astype(jnp.int32)
+            out.append(tok)
     return jnp.stack(out, axis=1)  # [B, max_new]

@@ -5,6 +5,10 @@ Microbatch accumulation runs as a ``lax.scan`` so XLA overlaps each
 microbatch's gradient reduce with the next microbatch's compute (the
 standard compute/comm overlap at scale); a straggler therefore costs at most
 one microbatch of work.
+
+The mesh may be passed explicitly or inherited from the ambient
+``repro.runtime.Runtime`` (``with runtime.use(rt):``); kernel-backend
+selection also rides on the runtime — no ``mode=`` strings here.
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import runtime as rtm
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.optim.adamw import OptConfig, apply_updates, global_norm, init_opt_state
@@ -22,6 +27,8 @@ __all__ = ["make_train_step", "make_loss_fn", "init_train_state"]
 
 
 def make_loss_fn(cfg: ModelConfig, mesh=None):
+    mesh = rtm.active_mesh(mesh)
+
     def loss_fn(params, batch):
         return M.loss_fn(params, cfg, batch, mesh=mesh)
 
@@ -43,6 +50,7 @@ def make_train_step(
     """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
     metrics)``.  ``batch`` is the global batch; with ``microbatches > 1`` it
     is split on the leading axis and gradients are accumulated in fp32."""
+    mesh = rtm.active_mesh(mesh)
     loss_fn = make_loss_fn(cfg, mesh)
 
     def _constrain_grads(grads):

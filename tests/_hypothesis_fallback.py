@@ -1,0 +1,94 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite must collect and run in a bare container (no pip installs),
+so the property tests import through here:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+The fallback replays each property as a fixed-seed parametrized sweep: every
+strategy draws ``max_examples`` deterministic samples (seeded per test name),
+so failures reproduce exactly.  Only the strategy surface this repo uses is
+implemented (``integers``, ``floats``, ``sampled_from``).  With the real
+``hypothesis`` installed (the ``dev`` extra), these shims are never imported.
+"""
+from __future__ import annotations
+
+import random
+
+__all__ = ["given", "settings", "st", "HealthCheck"]
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+
+st = _Strategies()
+
+
+class HealthCheck:  # accepted and ignored (suppress_health_check=...)
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def settings(*, max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Record ``max_examples``; all other hypothesis knobs are no-ops."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Run the test over a deterministic fixed-seed sample sweep."""
+
+    def deco(fn):
+        inner = fn
+
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", None) or getattr(
+                inner, "_fallback_max_examples", _DEFAULT_EXAMPLES
+            )
+            rng = random.Random(f"repro:{inner.__module__}.{inner.__qualname__}")
+            for i in range(n):
+                drawn = tuple(s.example(rng) for s in strategies)
+                try:
+                    inner(*drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"fallback property sweep failed at example {i}: "
+                        f"args={drawn!r}"
+                    ) from e
+
+        # deliberately NOT functools.wraps: exposing the inner signature
+        # (__wrapped__) would make pytest resolve drawn params as fixtures
+        for attr in ("__name__", "__qualname__", "__module__", "__doc__"):
+            setattr(wrapper, attr, getattr(inner, attr))
+        return wrapper
+
+    return deco

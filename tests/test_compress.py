@@ -1,7 +1,10 @@
 """Scheduled-form codec (paper §3.6) + MAC fidelity."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare container: fixed-seed fallback sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.compress import compress, decompress, simulate_macs
 

@@ -1,7 +1,10 @@
 """Mask / positional-encoding properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare container: fixed-seed fallback sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.models.common import causal_mask, mrope_tables, rotary_embedding, apply_rope
 

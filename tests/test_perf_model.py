@@ -1,7 +1,10 @@
 """Perf model properties: bounds, monotonicity, paper Fig. 20 tracking."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare container: fixed-seed fallback sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.perf_model import ConvLayer, TileConfig, simulate_conv
 

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare container: fixed-seed fallback sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.scheduler import connectivity, levels, make_schedule_step
 from repro.core.pe import simulate_stream, simulate_tile
