@@ -1,0 +1,81 @@
+"""Regression gate: compare a bench JSON against the checked-in baseline.
+
+    python benchmarks/compare.py BENCH_baseline.json bench_smoke.json \
+        --keys plan_cache_micro tensordash_spmm_micro --max-regression 0.25
+
+Fails (exit 1) when any gated bench is missing, failed to run, or its
+``us_per_call`` regressed by more than ``--max-regression`` relative to the
+baseline.  Improvements and un-gated benches are reported but never fail.
+CI machines are noisier than the machine that seeded the baseline, so gate
+only the benches whose absolute time is large enough to dominate jitter.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> tuple[dict, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    benches = payload.get("benches", payload)
+    meta = {k: payload.get(k) for k in ("platform", "python")}
+    return benches, meta
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--keys", nargs="+", required=True,
+                    help="bench names to gate on")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="fail above this fractional slowdown (default 25%%)")
+    args = ap.parse_args(argv)
+    (base, base_meta), (cur, cur_meta) = load(args.baseline), load(args.current)
+    if base_meta != cur_meta:
+        # absolute-time gate across machines is approximate; say so rather
+        # than silently comparing apples to oranges (reseed the baseline
+        # from this environment's JSON artifact to tighten it)
+        print(
+            f"note: baseline from {base_meta}, current from {cur_meta} — "
+            "absolute-us comparison spans environments",
+            file=sys.stderr,
+        )
+    failures = []
+    for key in args.keys:
+        b = base.get(key)
+        c = cur.get(key)
+        if b is None or not b.get("ok") or b.get("us_per_call") is None:
+            failures.append(f"{key}: no usable baseline entry in {args.baseline}")
+            continue
+        if c is None:
+            failures.append(f"{key}: missing from {args.current}")
+            continue
+        if not c.get("ok") or c.get("us_per_call") is None:
+            failures.append(f"{key}: failed to run ({c.get('derived')})")
+            continue
+        b_us, c_us = float(b["us_per_call"]), float(c["us_per_call"])
+        ratio = c_us / max(b_us, 1e-9) - 1.0
+        verdict = "REGRESSED" if ratio > args.max_regression else "ok"
+        print(f"{key}: {b_us:.0f}us -> {c_us:.0f}us ({ratio:+.0%}) {verdict}")
+        if ratio > args.max_regression:
+            failures.append(
+                f"{key}: {c_us:.0f}us vs baseline {b_us:.0f}us "
+                f"({ratio:+.0%} > +{args.max_regression:.0%})"
+            )
+    for key, c in sorted(cur.items()):
+        if key not in args.keys and c.get("us_per_call") is not None:
+            print(f"{key}: {float(c['us_per_call']):.0f}us (not gated)")
+    if failures:
+        print("\nFAIL:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nall gated benches within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,12 +4,20 @@ Prints ``name,us_per_call,derived`` CSV.  ``derived`` is a semicolon-joined
 summary of the reproduced numbers (no commas, CSV-safe).
 
 ``--smoke`` runs only the fast micro benchmarks (kernel, scheduler, plan
-cache) — the CI job that keeps plan-cache / hot-path regressions visible.
+cache, sparse backward) — the CI job that keeps plan-cache / hot-path
+regressions visible.  ``--json out.json`` additionally persists the results
+(us-per-call + derived numbers per bench) for artifact upload and the
+``benchmarks/compare.py`` regression gate against ``BENCH_baseline.json``.
+
+Exit status: non-zero when any smoke bench fails, or when *no* bench at all
+succeeded (a broken import must not green-wash the job).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import platform
 import sys
 import time
 
@@ -25,6 +33,18 @@ def _timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)
     return out, (time.time() - t0) * 1e6
+
+
+def _best_of(fn, reps: int = 20) -> float:
+    """Best-of-``reps`` wall time in us — the noise-robust statistic the CI
+    regression gate compares (a mean is dominated by scheduler jitter on
+    shared runners; the minimum is reproducible)."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best * 1e6
 
 
 def bench_fig13():
@@ -92,11 +112,7 @@ def bench_scheduler_step():
     step = jax.jit(jax.vmap(lambda z: make_schedule_step()(z).sel))
     z = jnp.asarray(np.random.default_rng(0).random((4096, 3, 16)) < 0.4)
     step(z).block_until_ready()
-    t0 = time.time()
-    n = 20
-    for _ in range(n):
-        step(z).block_until_ready()
-    us = (time.time() - t0) / n * 1e6
+    us = _best_of(lambda: step(z).block_until_ready())
     return us, "4096 PEs per call; combinational schedule model"
 
 
@@ -115,7 +131,9 @@ def bench_spmm_kernel():
     a = (a.reshape(m // 16, 16, k // 32, 32) * mask[:, None, :, None]).reshape(m, k)
     b = rng.standard_normal((k, n)).astype(np.float32)
     rt = Runtime(backend="interpret", bm=16, bk=32, bn=16)
-    out, us = _timed(rt.matmul, jnp.asarray(a), jnp.asarray(b))
+    out = rt.matmul(jnp.asarray(a), jnp.asarray(b))  # warm (trace + compile)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    us = _best_of(lambda: rt.matmul(aj, bj).block_until_ready(), reps=10)
     ref = a @ b
     err = float(abs(np.asarray(out) - ref).max())
     skipped = rt.plan(jnp.asarray(a)).skipped_fraction()
@@ -142,19 +160,57 @@ def bench_plan_cache():
     rt.matmul(x, w, plan_key="w", side="B").block_until_ready()  # prefill: plan once
     rt.matmul(x, w, plan=rt.plan(w, side="B"), side="B").block_until_ready()  # warm
 
-    def timed(fn, reps=20):
-        t0 = time.time()
-        for _ in range(reps):
-            fn().block_until_ready()
-        return (time.time() - t0) / reps * 1e6
-
     # same planned executor both sides; the delta is the per-call replanning
-    cached = timed(lambda: rt.matmul(x, w, plan_key="w", side="B"))
-    replan = timed(lambda: rt.matmul(x, w, plan=rt.plan(w, side="B"), side="B"))
+    cached = _best_of(lambda: rt.matmul(x, w, plan_key="w", side="B").block_until_ready())
+    replan = _best_of(
+        lambda: rt.matmul(x, w, plan=rt.plan(w, side="B"), side="B").block_until_ready()
+    )
     s = rt.plan_cache.stats()
     return cached, (
         f"cached={cached:.0f}us replan={replan:.0f}us "
         f"speedup={replan / max(cached, 1e-9):.2f}x "
+        f"hits={s['hits']} misses={s['misses']}"
+    )
+
+
+def bench_backward_planned():
+    """Microbenchmark: the sparsity-aware backward — both gradient products
+    (Eq. 2 W*G, Eq. 3 A*G) planned + executed through the backend registry,
+    with the transposed-operand plan replayed from the plan cache."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.ref import matmul_grads_ref
+    from repro.runtime import Runtime
+
+    rng = np.random.default_rng(0)
+    m, k, n, bm, bk, bn = 128, 256, 64, 16, 32, 16
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    mask = rng.random((m // bm, k // bk)) < 0.5
+    a = jnp.asarray((a.reshape(m // bm, bm, k // bk, bk) * mask[:, None, :, None]).reshape(m, k))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    g = rng.standard_normal((m, n)).astype(np.float32)
+    gmask = rng.random((m // bm, n // bn)) < 0.4  # ReLU'd G: sparse stream
+    g = jnp.asarray((g.reshape(m // bm, bm, n // bn, bn) * gmask[:, None, :, None]).reshape(m, n))
+
+    rt = Runtime(backend="dense", bm=bm, bk=bk, bn=bn)
+    da, db = rt.matmul_grads(a, b, g, plan_key="acts")  # warm: plans cached
+    da.block_until_ready(), db.block_until_ready()
+
+    def run():
+        da, db = rt.matmul_grads(a, b, g, plan_key="acts")
+        da.block_until_ready()
+        db.block_until_ready()
+
+    us = _best_of(run)
+    da_r, db_r = matmul_grads_ref(a, b, g)
+    err = max(
+        float(abs(np.asarray(da) - np.asarray(da_r)).max()),
+        float(abs(np.asarray(db) - np.asarray(db_r)).max()),
+    )
+    s = rt.plan_cache.stats()
+    return us, (
+        f"max_err={err:.1e} g_blocks_skipped={1.0 - float(jnp.mean(gmask)):.0%} "
         f"hits={s['hits']} misses={s['misses']}"
     )
 
@@ -177,28 +233,56 @@ BENCHES = [
     ("scheduler_step_micro", bench_scheduler_step),
     ("tensordash_spmm_micro", bench_spmm_kernel),
     ("plan_cache_micro", bench_plan_cache),
+    ("backward_planned_micro", bench_backward_planned),
     ("arch_tensordash_projection", bench_arch_projection),
 ]
 
-SMOKE = {"scheduler_step_micro", "tensordash_spmm_micro", "plan_cache_micro"}
+SMOKE = {
+    "scheduler_step_micro",
+    "tensordash_spmm_micro",
+    "plan_cache_micro",
+    "backward_planned_micro",
+}
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast micro benches only (CI perf-regression job)")
-    args = ap.parse_args()
-    failed = False
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results as JSON (CI artifact + "
+                         "benchmarks/compare.py input)")
+    args = ap.parse_args(argv)
+    results: dict[str, dict] = {}
+    failed = succeeded = 0
     print("name,us_per_call,derived")
     for name, fn in BENCHES:
         if args.smoke and name not in SMOKE:
             continue
         try:
             us, derived = fn()
+            succeeded += 1
             print(f"{name},{us:.0f},{derived}")
+            results[name] = {"us_per_call": us, "derived": derived, "ok": True}
         except Exception as e:  # pragma: no cover
-            failed = True
+            failed += 1
             print(f"{name},-1,FAILED {type(e).__name__}: {e}")
+            results[name] = {
+                "us_per_call": None, "derived": f"{type(e).__name__}: {e}", "ok": False,
+            }
+    if args.json:
+        payload = {
+            "smoke": args.smoke,
+            "timestamp": time.time(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "benches": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    if succeeded == 0 and failed:
+        raise SystemExit(2)  # every bench failed: almost certainly a broken import
     if failed and args.smoke:
         raise SystemExit(1)  # CI visibility: smoke benches must run clean
 

@@ -34,6 +34,8 @@ __all__ = [
     "simulate_conv",
     "ConvResult",
     "model_speedup",
+    "ffn_layers_from_config",
+    "speedup_from_densities",
     "FWD",
     "BWD_INPUT",
     "BWD_WEIGHT",
@@ -203,3 +205,49 @@ def model_speedup(
     dense_all = sum(d for _, d in totals.values())
     out["overall"] = dense_all / max(td_all, 1.0)
     return out
+
+
+def ffn_layers_from_config(cfg, n_layers: int | None = None) -> list[ConvLayer]:
+    """The per-layer FFN contraction of a transformer config as FC layers.
+
+    ``h @ w_down`` is the product the TPU kernel accelerates (reduction over
+    ``d_ff``, one output per ``d_model`` unit), i.e. an FC layer with
+    ``kx = ky = ox = oy = 1`` in the paper's convolution vocabulary — the
+    layer set the live training taps feed into :func:`model_speedup`.
+    """
+    n = n_layers if n_layers is not None else cfg.num_layers
+    d_ff = cfg.d_ff or cfg.d_model * 4
+    return [
+        ConvLayer(name=f"ffn{i}", c_in=d_ff, kx=1, ky=1, c_out=cfg.d_model, ox=1, oy=1)
+        for i in range(n)
+    ]
+
+
+def speedup_from_densities(
+    a_density: Sequence[float],
+    g_density: Sequence[float],
+    layers: Sequence[ConvLayer],
+    **kw,
+) -> dict[str, float]:
+    """Measured per-layer A/G *densities* -> modeled TensorDash speedup.
+
+    This is the live Fig. 14 estimator: the train step's sparsity taps
+    record each layer's activation (A) and output-gradient (G_O) non-zero
+    fractions; mapping them onto the three training convolutions — FWD
+    sparsifies A, BWD_INPUT sparsifies G_O, BWD_WEIGHT the sparser of the
+    two (paper Eq. 1-3) — prices one step of training on the simulated
+    accelerator.
+    """
+    if len(a_density) != len(layers) or len(g_density) != len(layers):
+        raise ValueError(
+            f"{len(layers)} layers but {len(a_density)} A / {len(g_density)} G densities"
+        )
+    spars = [
+        {
+            FWD: 1.0 - float(ad),
+            BWD_INPUT: 1.0 - float(gd),
+            BWD_WEIGHT: max(1.0 - float(ad), 1.0 - float(gd)),
+        }
+        for ad, gd in zip(a_density, g_density)
+    ]
+    return model_speedup(list(layers), spars, **kw)

@@ -15,14 +15,19 @@ import warnings
 from repro import runtime as rtm
 from repro.kernels.tensordash_spmm import (
     plan_blocks,
+    plan_to_mask,
     tensordash_matmul,
     tensordash_matmul_planned,
+    transpose_plan,
 )
 
 __all__ = [
     "matmul",
+    "matmul_grads",
     "sparse_ffn",
     "plan_blocks",
+    "plan_to_mask",
+    "transpose_plan",
     "tensordash_matmul",
     "tensordash_matmul_planned",
 ]
@@ -53,6 +58,15 @@ def matmul(a, b, *, mode: str | None = None, runtime: "rtm.Runtime | None" = Non
            bm: int | None = None, bk: int | None = None, bn: int | None = None):
     """``a @ b`` on the resolved runtime's kernel backend."""
     return _resolve(mode, runtime, bm, bk, bn).matmul(a, b)
+
+
+def matmul_grads(a, b, g, *, runtime: "rtm.Runtime | None" = None,
+                 bm: int | None = None, bk: int | None = None, bn: int | None = None):
+    """Eager sparsity-aware cotangents ``(da, db)`` of ``a @ b`` given the
+    output cotangent ``g`` — the registry-routed backward products (paper
+    Eq. 2-3) ``jax.grad`` executes, exposed for manual backprop and
+    microbenchmarks (plan-cache reuse is live and observable here)."""
+    return _resolve(None, runtime, bm, bk, bn).matmul_grads(a, b, g)
 
 
 def sparse_ffn(x, w1, w2, *, activation: str = "relu", mode: str | None = None,

@@ -61,6 +61,17 @@ def tensordash_matmul_ref(nnz, idx, a, b, *, bm: int, bk: int, bn: int, out_dtyp
     return acc.reshape(m, n).astype(out_dtype)
 
 
+def matmul_grads_ref(a, b, g):
+    """Dense-math cotangents of ``a @ b`` (fp32 accumulate, operand dtypes
+    restored) — the oracle the sparsity-aware VJP must match: its planned
+    backward products only elide all-zero blocks of ``g`` / ``a.T``, so the
+    values are identical up to fp32 reduction order."""
+    g32 = g.astype(jnp.float32)
+    da = jnp.dot(g32, b.astype(jnp.float32).T).astype(a.dtype)
+    db = jnp.dot(a.astype(jnp.float32).T, g32).astype(b.dtype)
+    return da, db
+
+
 def sparse_ffn_ref(x, w1, w2, activation="relu"):
     h = jnp.dot(x, w1, preferred_element_type=jnp.float32)
     if activation == "relu":

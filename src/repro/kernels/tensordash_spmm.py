@@ -42,7 +42,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["plan_blocks", "tensordash_matmul_planned", "tensordash_matmul"]
+__all__ = [
+    "plan_blocks",
+    "plan_to_mask",
+    "transpose_plan",
+    "tensordash_matmul_planned",
+    "tensordash_matmul",
+]
 
 
 
@@ -50,6 +56,19 @@ def _compiler_params(**kw):
     # jax renamed TPUCompilerParams -> CompilerParams across releases
     cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
     return cls(**kw)
+
+def _mask_to_plan(nonzero: jax.Array):
+    """Compact a block-nonzero mask ``[Mb, Kb]`` into ``(nnz, idx)``."""
+    kb = nonzero.shape[1]
+    nnz = jnp.sum(nonzero, axis=1).astype(jnp.int32)  # [Mb]
+    # stable sort: effectual block ids first, in ascending k order
+    order = jnp.argsort(~nonzero, axis=1, stable=True).astype(jnp.int32)
+    # tail: repeat the last effectual index so revisits hit a resident block
+    pos = jnp.arange(kb, dtype=jnp.int32)[None, :]
+    last = jnp.maximum(nnz - 1, 0)[:, None]
+    idx = jnp.where(pos < jnp.maximum(nnz, 1)[:, None], order, jnp.take_along_axis(order, last, axis=1))
+    return nnz, idx
+
 
 def plan_blocks(a: jax.Array, bm: int, bk: int):
     """Runtime block scheduler: compacted effectual K-block lists.
@@ -64,14 +83,32 @@ def plan_blocks(a: jax.Array, bm: int, bk: int):
     mb, kb = m // bm, k // bk
     blocks = a.reshape(mb, bm, kb, bk)
     nonzero = jnp.any(blocks != 0, axis=(1, 3))  # [Mb, Kb]
-    nnz = jnp.sum(nonzero, axis=1).astype(jnp.int32)  # [Mb]
-    # stable sort: effectual block ids first, in ascending k order
-    order = jnp.argsort(~nonzero, axis=1, stable=True).astype(jnp.int32)
-    # tail: repeat the last effectual index so revisits hit a resident block
-    pos = jnp.arange(kb, dtype=jnp.int32)[None, :]
-    last = jnp.maximum(nnz - 1, 0)[:, None]
-    idx = jnp.where(pos < jnp.maximum(nnz, 1)[:, None], order, jnp.take_along_axis(order, last, axis=1))
-    return nnz, idx
+    return _mask_to_plan(nonzero)
+
+
+def plan_to_mask(nnz: jax.Array, idx: jax.Array) -> jax.Array:
+    """Recover the block-nonzero mask ``[Mb, Kb]`` a plan was compacted from.
+
+    The compaction is lossless: ``idx[r, :nnz[r]]`` lists exactly the
+    effectual blocks, so the mask — and hence any re-blocked plan — can be
+    reconstructed from metadata alone, without another pass over the data.
+    """
+    mb, kb = idx.shape
+    valid = jnp.arange(kb, dtype=jnp.int32)[None, :] < nnz[:, None]
+    mask = jnp.zeros((mb, kb), bool)
+    return mask.at[jnp.arange(mb)[:, None], idx].max(valid)
+
+
+def transpose_plan(nnz: jax.Array, idx: jax.Array):
+    """Plan of ``a.T`` (blocks ``bk x bm``) from the plan of ``a``.
+
+    The backward pass needs the weight-gradient product ``a.T @ g`` (paper
+    Eq. 3) planned over ``a.T``; its block-nonzero mask is just the transpose
+    of ``a``'s, so the transposed plan is a pure metadata transform — the
+    software analogue of the paper's backside scheduler emitting the
+    transposed schedule alongside the forward one (§3.7).
+    """
+    return _mask_to_plan(plan_to_mask(nnz, idx).T)
 
 
 def _kernel(nnz_ref, idx_ref, a_ref, b_ref, o_ref, acc_ref, *, n_kb: int):

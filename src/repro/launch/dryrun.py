@@ -139,7 +139,7 @@ def _compile_once(cfg, arch: str, shape_name: str, multi_pod: bool, *, full: boo
             aopt = jax.eval_shape(init_opt_state, aparams)
             opt_ps = OptState(step=jax.sharding.PartitionSpec(), m=ppspecs, v=ppspecs)
             aopt = _with_shardings(aopt, opt_ps, mesh)
-            step = make_train_step(cfg, OptConfig(), mesh)
+            step = make_train_step(cfg, OptConfig())  # mesh: ambient runtime
             from jax.sharding import NamedSharding
 
             out_sh = (

@@ -46,6 +46,12 @@ def main() -> None:
                     help="straggler mitigation: abort+checkpoint if a step exceeds this")
     ap.add_argument("--backend", default="dense", choices=rtm.available_backends(),
                     help="kernel backend for the TensorDash sparse paths")
+    ap.add_argument("--sparsity-taps", action="store_true",
+                    help="record per-layer A/G densities + modeled TensorDash "
+                         "speedup every step (paper Fig. 14 live view)")
+    ap.add_argument("--bm", type=int, default=None, help="block rows (sparse kernels)")
+    ap.add_argument("--bk", type=int, default=None, help="contraction block size")
+    ap.add_argument("--bn", type=int, default=None, help="output block size")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -55,7 +61,10 @@ def main() -> None:
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
     cfg = dataclasses.replace(cfg, remat=not args.smoke)
-    rt = rtm.Runtime(backend=args.backend, mesh=mesh)
+    geom = {k: v for k, v in (("bm", args.bm), ("bk", args.bk), ("bn", args.bn)) if v}
+    if args.smoke and args.backend != "dense" and not geom:
+        geom = {"bm": 8, "bk": 16, "bn": 16}  # MXU-sized blocks don't divide smoke shapes
+    rt = rtm.Runtime(backend=args.backend, mesh=mesh, **geom)
     rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU) vs silent dense fallback
 
     specs = M.param_specs(cfg)
@@ -68,7 +77,9 @@ def main() -> None:
         opt = init_opt_state(params)
         data = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
         ocfg = OptConfig(total_steps=max(args.steps, 100))
-        step_fn = jax.jit(make_train_step(cfg, ocfg, microbatches=args.microbatches))
+        step_fn = jax.jit(make_train_step(
+            cfg, ocfg, microbatches=args.microbatches, sparsity_taps=args.sparsity_taps
+        ))
         guard = PreemptionGuard()
 
         start = 0
@@ -88,7 +99,20 @@ def main() -> None:
                     save(args.ckpt_dir, i + 1, {"params": params, "opt": opt})
                 return
             if (i + 1) % 5 == 0 or i == start:
-                print(f"step {i+1:5d} loss {float(m['loss']):.4f} gnorm {float(m['grad_norm']):.2f} {dt:.2f}s")
+                line = f"step {i+1:5d} loss {float(m['loss']):.4f} gnorm {float(m['grad_norm']):.2f} {dt:.2f}s"
+                if args.sparsity_taps:
+                    import numpy as np
+
+                    from repro.train.step import modeled_speedup
+
+                    sim = modeled_speedup(m, cfg, max_t=64, sample_groups=1)
+                    line += (
+                        f" A={float(np.mean(m['A_density'])):.2f}"
+                        f" G={float(np.mean(m['G_density'])):.2f}"
+                        f" ideal={float(m['modeled_speedup']):.2f}x"
+                        f" modeled={sim['overall']:.2f}x"
+                    )
+                print(line)
             if args.ckpt_dir and ((i + 1) % args.ckpt_every == 0 or guard.should_save):
                 save(args.ckpt_dir, i + 1, {"params": params, "opt": opt})
                 if guard.should_save:

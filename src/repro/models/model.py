@@ -77,10 +77,10 @@ def _head(params, cfg: ModelConfig, h, mesh=None):
     return softcap(logits, cfg.final_softcap)
 
 
-def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None):
+def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None, taps=None):
     mesh = rtm.active_mesh(mesh)
     if cfg.family in ("dense", "moe"):
-        return tfm.forward(params, cfg, batch, mesh=mesh, probes=probes)
+        return tfm.forward(params, cfg, batch, mesh=mesh, probes=probes, taps=taps)
     h = constrain(tfm._embed_in(params, cfg, batch), mesh, (DP, None, None))
     s = h.shape[1]
     if cfg.family == "ssm":
@@ -97,9 +97,14 @@ def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None):
     return _head(params, cfg, h, mesh=mesh)
 
 
-def loss_fn(params, cfg: ModelConfig, batch, mesh=None, probes=None):
-    """Mean next-token cross-entropy (fp32 log-softmax)."""
-    logits = forward(params, cfg, batch, mesh=rtm.active_mesh(mesh), probes=probes).astype(jnp.float32)
+def loss_fn(params, cfg: ModelConfig, batch, mesh=None, probes=None, taps=None):
+    """Mean next-token cross-entropy (fp32 log-softmax).
+
+    ``probes``/``taps`` are the TensorDash training instrumentation (see
+    :func:`repro.models.transformer.forward`): zero probes whose gradients
+    are the per-layer G_O streams, and a dict collecting per-layer measured
+    activation sparsity."""
+    logits = forward(params, cfg, batch, mesh=rtm.active_mesh(mesh), probes=probes, taps=taps).astype(jnp.float32)
     labels = batch["labels"]
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]

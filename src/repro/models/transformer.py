@@ -192,7 +192,14 @@ def block_specs(cfg: ModelConfig, *, moe: bool) -> dict:
     return specs
 
 
-def _block_fwd(params, cfg: ModelConfig, h, positions, is_global, mesh, probes=None, layer_tag=""):
+def _block_fwd(params, cfg: ModelConfig, h, positions, is_global, mesh, probe=None, taps=False):
+    """One block forward -> ``(h, tap_stats | None)``.
+
+    ``probe`` is a zero array added at the MLP output (the zero-probe trick:
+    ``jax.grad`` w.r.t. it is exactly this layer's output-gradient stream
+    G_O, the paper's Eq. 2/3 sparse operand); ``taps=True`` additionally
+    returns the FFN activation's measured :class:`SparsityStats` (the Eq. 1
+    A stream)."""
     zero_centered = cfg.post_norms  # gemma-style norms
     a = rms_norm(h, params["ln1"], zero_centered=zero_centered)
     if cfg.use_mla:
@@ -207,15 +214,23 @@ def _block_fwd(params, cfg: ModelConfig, h, positions, is_global, mesh, probes=N
         a = rms_norm(a, params["post_attn_norm"], zero_centered=True)
     h = h + a
     m = rms_norm(h, params["ln2"], zero_centered=zero_centered)
+    stats = None
     if cfg.num_experts and "router" in params["mlp"]:
         m = moe_mod.moe_ffn(params["mlp"], moe_config(cfg), m, mesh=mesh)
+        if taps:  # no hidden tap inside expert dispatch: measure the output
+            stats = {"ffn_act": sps.measure(m)}
     else:
-        m = mlp_fwd(params["mlp"], cfg, m, mesh=mesh)
+        t = {} if taps else None
+        m = mlp_fwd(params["mlp"], cfg, m, taps=t, mesh=mesh)
+        stats = t
     m = constrain(m, mesh, (DP, _seq_ax(cfg), None))
     if cfg.post_norms:
         m = rms_norm(m, params["post_mlp_norm"], zero_centered=True)
-    m = sps.apply_probes(m, probes, layer_tag) if probes else m
-    return constrain(h + m, mesh, (DP, _seq_ax(cfg), None))
+    if probe is not None:
+        # zero probe: d loss / d probe == G_O at the MLP output; cast so the
+        # add never promotes the activation dtype (bf16 models stay bf16)
+        m = m + probe.astype(m.dtype)
+    return constrain(h + m, mesh, (DP, _seq_ax(cfg), None)), stats
 
 
 def _block_decode(params, cfg: ModelConfig, h, cache, pos, is_global, mesh):
@@ -302,42 +317,69 @@ def _positions(cfg: ModelConfig, batch, s: int):
     return jnp.arange(s)
 
 
-def _scan_layers(cfg, body, h, stacked_params, flags):
+def _scan_layers(cfg, body, h, stacked_params, flags, probes=None, collect=False):
+    """Run ``body(h, p, g, probe) -> (h, taps)`` over a layer stack.
+
+    ``probes`` (optional) is scanned along with the params — one zero probe
+    slice per layer; ``collect=True`` stacks each layer's tap stats into the
+    second return value (leaves gain a leading ``[n_layers]`` axis)."""
     n = jax.tree.leaves(stacked_params)[0].shape[0]
     if cfg.remat:
         body = jax.checkpoint(body, static_argnums=(2,)) if cfg.unroll else jax.checkpoint(body)
     if cfg.unroll:
         # python loop with STATIC per-layer flags: enables static-causal
         # attention slicing (and static sliding windows for gemma-2)
+        outs = []
         for i, g in enumerate(_static_flags(cfg, n)):
             p = jax.tree.map(lambda x: x[i], stacked_params)
-            h = body(h, p, g)
-        return h
+            h, t = body(h, p, g, probes[i] if probes is not None else None)
+            outs.append(t)
+        stats = jax.tree.map(lambda *xs: jnp.stack(xs), *outs) if collect else None
+        return h, stats
 
     def scan_fn(carry, inp):
-        p, g = inp
-        return body(carry, p, g), None
+        p, g, pr = inp
+        return body(carry, p, g, pr)
 
-    h, _ = jax.lax.scan(scan_fn, h, (stacked_params, flags))
-    return h
+    h, stats = jax.lax.scan(scan_fn, h, (stacked_params, flags, probes))
+    return h, (stats if collect else None)
 
 
-def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None):
-    """Full-sequence forward -> logits (train / eval)."""
+def forward(params, cfg: ModelConfig, batch, mesh=None, probes=None, taps=None):
+    """Full-sequence forward -> logits (train / eval).
+
+    ``probes`` maps stack names (``"layers"``, ``"dense_layers"``) to
+    ``[n_layers, B, S, D]`` zero arrays added at each layer's MLP output —
+    gradients w.r.t. them are the per-layer G_O streams.  Passing a dict as
+    ``taps`` fills it (same keys) with per-layer measured FFN-activation
+    :class:`SparsityStats` — together the A/G densities TensorDash training
+    instrumentation feeds into ``core.perf_model``.
+    """
     mesh = rtm.active_mesh(mesh)
     h = constrain(_embed_in(params, cfg, batch), mesh, (DP, _seq_ax(cfg), None))
     s = h.shape[1]
     positions = _positions(cfg, batch, s)
+    collect = taps is not None
+    probes = probes or {}
 
-    def body(h, p, g):
-        return _block_fwd(p, cfg, h, positions, g, mesh, probes=None)
+    def body(h, p, g, pr):
+        return _block_fwd(p, cfg, h, positions, g, mesh, probe=pr, taps=collect)
 
     if cfg.family == "moe" and cfg.first_dense_layers:
-        cfg_dense = cfg  # same dims; dense path selected by param structure
-        h = _scan_layers(cfg, lambda hh, p, g: _block_fwd(p, cfg_dense, hh, positions, g, mesh),
-                         h, params["dense_layers"], _global_flags(cfg, cfg.first_dense_layers))
+        h, dstats = _scan_layers(
+            cfg, body, h, params["dense_layers"],
+            _global_flags(cfg, cfg.first_dense_layers),
+            probes=probes.get("dense_layers"), collect=collect,
+        )
+        if collect:
+            taps["dense_layers"] = dstats
     n = params["layers"]["ln1"].shape[0]
-    h = _scan_layers(cfg, body, h, params["layers"], _global_flags(cfg, n))
+    h, stats = _scan_layers(
+        cfg, body, h, params["layers"], _global_flags(cfg, n),
+        probes=probes.get("layers"), collect=collect,
+    )
+    if collect:
+        taps["layers"] = stats
     h = rms_norm(h, params["final_norm"], zero_centered=cfg.post_norms)
     if cfg.frontend == "audio":
         logits = constrain(jnp.einsum("bsd,kdv->bskv", h, params["lm_head"]), mesh, (DP, None, None, "model"))

@@ -12,6 +12,7 @@
 Replaces the deprecated ``mode=`` kwargs on ``repro.kernels.ops``, the
 ``ModelConfig.ffn_kernel_mode`` string and hand-threaded ``mesh=`` state.
 """
+from repro.runtime.autodiff import PlannedVJP, planned_matmul, planned_matmul_grads
 from repro.runtime.backends import (
     BackendCapabilityError,
     KernelBackend,
@@ -44,4 +45,7 @@ __all__ = [
     "SparsityPlan",
     "PlanCache",
     "plan_operand",
+    "PlannedVJP",
+    "planned_matmul",
+    "planned_matmul_grads",
 ]

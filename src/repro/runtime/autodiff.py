@@ -1,0 +1,168 @@
+"""Sparsity-aware differentiation for the planned matmul.
+
+TensorDash's training claim rests on exploiting sparsity in *all three*
+per-layer products (paper Eq. 1-3, the roles named in
+:mod:`repro.core.perf_model`):
+
+* ``FWD`` (A*W)          — the planned forward ``out = a @ b``;
+* ``BWD_INPUT`` (W*G)    — ``da = g @ b.T``, sparse stream = the output
+  gradients ``g`` (ReLU'd forwards make these the sparsest tensors in
+  training);
+* ``BWD_WEIGHT`` (A*G)   — ``db = a.T @ g``, sparse stream = the transposed
+  forward operand, whose plan is a pure metadata transpose of the forward
+  plan (:func:`repro.kernels.tensordash_spmm.transpose_plan` — no second
+  pass over ``a``).
+
+:func:`planned_matmul` is the one differentiation rule every backend's
+``matmul_planned`` wraps: the backward rule builds/reuses
+:class:`~repro.runtime.plan.SparsityPlan`\\ s for both gradient products and
+executes them through the :mod:`~repro.runtime.backends` registry, replacing
+the dense-VJP escape hatch the Pallas backend used to carry.
+
+Gradient semantics are those of the *math* function ``a @ b`` (as before):
+the plan only elides all-zero blocks of the operand it was built from, so
+the planned forward equals the dense product and the dense cotangents are
+exact.  The backward merely *executes* them sparsely — eliding all-zero
+blocks of ``g`` / ``a.T`` — which changes nothing but the work done.
+
+Plan reuse: when a plan cache + key ride along (``Runtime.matmul`` threads
+its own), concrete (eager) backward executions cache the transposed-operand
+plan — for a weight-side product that is "plan W and W.T once, reuse across
+microbatches".  Inside ``jit``/``grad``/``scan`` operands are tracers, plans
+are part of the traced program (the cache's ``traced`` counter observes
+them), and XLA hoists the loop-invariant weight plans instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tensordash_spmm import transpose_plan
+from repro.runtime.plan import PlanCache, SparsityPlan
+
+__all__ = ["PlannedVJP", "planned_matmul", "planned_matmul_grads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannedVJP:
+    """Static context for one planned matmul's differentiation rule.
+
+    ``backend`` executes the primal, ``grad_backend`` the two backward
+    products (same registry; defaults to the primal's).  ``cache``/``key``
+    opt the backward's plans into a :class:`PlanCache` (hashed by identity —
+    two contexts sharing a cache compare equal only on the same cache).
+    """
+
+    backend: str
+    bm: int
+    bk: int
+    bn: int
+    out_dtype: Any = None
+    grad_backend: str | None = None
+    cache: PlanCache | None = None
+    key: Any = None
+
+    @property
+    def bwd_backend(self) -> str:
+        return self.grad_backend or self.backend
+
+    def _execute(self, name, nnz, idx, a, b, *, bm, bk, bn, out_dtype):
+        from repro.runtime.backends import get_backend  # local: import cycle
+
+        return get_backend(name).execute_planned(
+            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
+        )
+
+
+def _is_traced(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def _cot_plan(ctx: PlannedVJP, g) -> SparsityPlan:
+    """Plan the output-gradient stream (Eq. 2's sparse operand) — dynamic,
+    per call; routed through the cache for counter visibility (a fresh
+    cotangent never hits by identity, and never should)."""
+    from repro.runtime.plan import plan_operand
+
+    if ctx.cache is not None:
+        return ctx.cache.get_or_build(("vjp_cot", ctx.key), g, ctx.bm, ctx.bn)
+    return plan_operand(g, ctx.bm, ctx.bn)
+
+
+def _lhs_t_plan(ctx: PlannedVJP, nnz, idx, a) -> SparsityPlan:
+    """Plan of ``a.T`` (Eq. 3's sparse operand), derived by metadata
+    transpose of the forward plan.
+
+    The derived plan depends only on the forward plan's metadata, so cache
+    hits are identity-validated against ``idx`` (not ``a``): as long as the
+    forward plan is being reused — a cached static-weight plan across
+    microbatches — its transpose is reused too, planned exactly once.
+    """
+    key = ("vjp_lhs_t", ctx.key)
+    cache, concrete = ctx.cache, not _is_traced(idx)
+    if cache is not None:
+        if concrete:
+            hit = cache.lookup(key, idx, ctx.bk, ctx.bm)
+            if hit is not None:
+                return hit
+        else:
+            cache.traced += 1
+    nnz_t, idx_t = transpose_plan(nnz, idx)
+    plan = SparsityPlan(
+        nnz=nnz_t, idx=idx_t, bm=ctx.bk, bk=ctx.bm,
+        shape=(a.shape[1], a.shape[0]), dtype=a.dtype,
+    )
+    if cache is not None and concrete:
+        cache.store(key, idx, plan)
+    return plan
+
+
+def planned_matmul_grads(ctx: PlannedVJP, nnz, idx, a, b, g):
+    """Both training cotangents of the planned ``a @ b``, registry-executed.
+
+    ``da = g @ b.T`` planned over ``g``'s zero blocks (BWD_INPUT) and
+    ``db = a.T @ g`` planned over ``a.T``'s (BWD_WEIGHT); fp32 accumulation,
+    operand dtypes restored.  This is the exact function the ``custom_vjp``
+    backward rule runs — callable eagerly (manual backprop, benchmarks,
+    cache-counter tests) with concrete arrays, where plan caching is live.
+    """
+    g32 = g.astype(jnp.float32)
+    pg = _cot_plan(ctx, g32)
+    da = ctx._execute(
+        ctx.bwd_backend, pg.nnz, pg.idx, g32, b.astype(jnp.float32).T,
+        bm=ctx.bm, bk=ctx.bn, bn=ctx.bk, out_dtype=a.dtype,
+    )
+    pt = _lhs_t_plan(ctx, nnz, idx, a)
+    db = ctx._execute(
+        ctx.bwd_backend, pt.nnz, pt.idx, a.astype(jnp.float32).T, g32,
+        bm=ctx.bk, bk=ctx.bm, bn=ctx.bn, out_dtype=b.dtype,
+    )
+    return da, db
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def planned_matmul(ctx: PlannedVJP, nnz, idx, a, b):
+    """Planned ``a @ b`` on ``ctx.backend`` with the sparsity-aware VJP."""
+    return ctx._execute(
+        ctx.backend, nnz, idx, a, b,
+        bm=ctx.bm, bk=ctx.bk, bn=ctx.bn, out_dtype=ctx.out_dtype,
+    )
+
+
+def _planned_fwd(ctx, nnz, idx, a, b):
+    return planned_matmul(ctx, nnz, idx, a, b), (nnz, idx, a, b)
+
+
+def _planned_bwd(ctx, res, g):
+    nnz, idx, a, b = res
+    da, db = planned_matmul_grads(ctx, nnz, idx, a, b, g)
+    zero = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int plan metadata
+    return zero(nnz), zero(idx), da, db
+
+
+planned_matmul.defvjp(_planned_fwd, _planned_bwd)

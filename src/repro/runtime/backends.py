@@ -19,14 +19,11 @@ Built-ins:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.tensordash_spmm import tensordash_matmul_planned
+from repro.runtime.autodiff import PlannedVJP, planned_matmul
 from repro.runtime.plan import SparsityPlan, plan_operand
 
 __all__ = [
@@ -70,10 +67,39 @@ class KernelBackend:
 
     # -- execution --------------------------------------------------------
     def matmul(self, a, b, *, bm: int, bk: int, bn: int, out_dtype=None):
+        """Unplanned ``a @ b`` (self-planning for sparse backends).
+
+        Note: ``Runtime.matmul`` only dispatches here for non-sparse
+        backends; sparse backends are planned by the runtime itself (so the
+        plan cache threads through to the backward) and executed via
+        :meth:`execute_planned` — customize that, not this, for the planned
+        path.
+        """
         raise NotImplementedError
 
-    def matmul_planned(self, plan: SparsityPlan, a, b, *, bn: int, out_dtype=None):
+    def execute_planned(self, nnz, idx, a, b, *, bm: int, bk: int, bn: int, out_dtype=None):
+        """Primal-only planned ``a @ b`` (no differentiation rule).
+
+        This is the raw executor the registry routes — both the forward and
+        the two backward products of :func:`repro.runtime.autodiff.planned_matmul`
+        land here.
+        """
         raise NotImplementedError
+
+    def matmul_planned(self, plan: SparsityPlan, a, b, *, bn: int, out_dtype=None,
+                       plan_cache=None, plan_key=None, grad_backend=None):
+        """Planned ``a @ b`` with the sparsity-aware VJP.
+
+        Training through any backend routes *both* gradient products (paper
+        Eq. 2-3) back through this registry with their own ``SparsityPlan``s;
+        ``plan_cache``/``plan_key`` let eager backward executions reuse the
+        transposed-weight plan across microbatches.
+        """
+        ctx = PlannedVJP(
+            backend=self.name, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
+            grad_backend=grad_backend, cache=plan_cache, key=plan_key,
+        )
+        return planned_matmul(ctx, plan.nnz, plan.idx, a, b)
 
 
 class DenseBackend(KernelBackend):
@@ -94,9 +120,9 @@ class DenseBackend(KernelBackend):
         out = ref.matmul_ref(a, b)
         return out.astype(out_dtype) if out_dtype else out
 
-    def matmul_planned(self, plan, a, b, *, bn, out_dtype=None):
+    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None):
         return ref.tensordash_matmul_ref(
-            plan.nnz, plan.idx, a, b, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype
+            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
         )
 
 
@@ -110,41 +136,10 @@ class ReferenceBackend(KernelBackend):
         plan = plan_operand(a, bm, bk)
         return self.matmul_planned(plan, a, b, bn=bn, out_dtype=out_dtype)
 
-    def matmul_planned(self, plan, a, b, *, bn, out_dtype=None):
+    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None):
         return ref.tensordash_matmul_ref(
-            plan.nnz, plan.idx, a, b, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype
+            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
         )
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
-def _pallas_planned(interpret, bm, bk, bn, out_dtype, nnz, idx, a, b):
-    """Planned Pallas matmul with a dense backward.
-
-    ``pl.pallas_call`` defines no differentiation rule, so training through
-    the sparse FFN / LM head would crash.  The dense VJP is *exact* here:
-    the plan (built from ``a``) only elides all-zero blocks, so the forward
-    equals the dense product and d(a@b) = (g @ b.T, a.T @ g) everywhere.
-    """
-    return tensordash_matmul_planned(
-        nnz, idx, a, b, bm=bm, bk=bk, bn=bn, interpret=interpret, out_dtype=out_dtype
-    )
-
-
-def _pallas_planned_fwd(interpret, bm, bk, bn, out_dtype, nnz, idx, a, b):
-    out = _pallas_planned(interpret, bm, bk, bn, out_dtype, nnz, idx, a, b)
-    return out, (nnz, idx, a, b)
-
-
-def _pallas_planned_bwd(interpret, bm, bk, bn, out_dtype, res, g):
-    nnz, idx, a, b = res
-    g32 = g.astype(jnp.float32)
-    da = jnp.dot(g32, b.astype(jnp.float32).T).astype(a.dtype)
-    db = jnp.dot(a.astype(jnp.float32).T, g32).astype(b.dtype)
-    zero = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int plan metadata
-    return zero(nnz), zero(idx), da, db
-
-
-_pallas_planned.defvjp(_pallas_planned_fwd, _pallas_planned_bwd)
 
 
 class PallasBackend(KernelBackend):
@@ -167,10 +162,11 @@ class PallasBackend(KernelBackend):
         plan = plan_operand(a, bm, bk)
         return self.matmul_planned(plan, a, b, bn=bn, out_dtype=out_dtype)
 
-    def matmul_planned(self, plan, a, b, *, bn, out_dtype=None):
+    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None):
         self.check_platform()
-        return _pallas_planned(
-            self.interpret, plan.bm, plan.bk, bn, out_dtype, plan.nnz, plan.idx, a, b
+        return tensordash_matmul_planned(
+            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, interpret=self.interpret,
+            out_dtype=out_dtype,
         )
 
 

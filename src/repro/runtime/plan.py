@@ -112,6 +112,10 @@ class PlanCache:
         self.capacity = capacity
         self.hits = 0
         self.misses = 0
+        #: plans built for traced operands (inside jit/grad/scan): part of the
+        #: traced program, never cached — counted so tests can observe that a
+        #: compiled path (e.g. the sparsity-aware backward) did plan
+        self.traced = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -143,6 +147,7 @@ class PlanCache:
     def get_or_build(self, key, a, bm: int, bk: int, *, side: str = "A") -> SparsityPlan:
         if isinstance(a, jax.core.Tracer):
             # Inside a trace the plan is part of the program; never cache.
+            self.traced += 1
             operand = a.T if side == "B" else a
             return plan_operand(operand, bm, bk, side=side)
         plan = self.lookup(key, a, bm, bk, side)
@@ -152,9 +157,15 @@ class PlanCache:
         return self.store(key, a, plan_operand(operand, bm, bk, side=side))
 
     def stats(self) -> dict:
-        return {"entries": len(self._entries), "hits": self.hits, "misses": self.misses}
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "traced": self.traced,
+        }
 
     def clear(self) -> None:
         self._entries.clear()
         self.hits = 0
         self.misses = 0
+        self.traced = 0

@@ -114,6 +114,12 @@ class Runtime:
         executed through the same kernel as ``(b.T @ a.T).T``.  ``plan_key``
         routes planning through the keyed cache — the serving decode loop's
         amortization path.
+
+        Differentiable: ``jax.grad`` through a planned matmul executes both
+        gradient products (paper Eq. 2-3) through the backend registry with
+        their own ``SparsityPlan``s (see ``repro.runtime.autodiff``); the
+        plan cache rides along so eager backward passes reuse the static
+        transposed-weight plan across microbatches.
         """
         if jnp.dtype(self.accum_dtype) != jnp.dtype(jnp.float32):
             raise NotImplementedError(
@@ -129,13 +135,47 @@ class Runtime:
         if side == "B":
             if plan is None:
                 plan = self.plan(b, key=plan_key, side="B")
-            out_t = kernel.matmul_planned(plan, b.T, a.T, bn=self.bm, out_dtype=a.dtype)
+            out_t = kernel.matmul_planned(
+                plan, b.T, a.T, bn=self.bm, out_dtype=a.dtype,
+                plan_cache=self.plan_cache, plan_key=("B", plan_key),
+            )
             return out_t.T
-        if plan is None and plan_key is None:
-            return kernel.matmul(a, b, bm=self.bm, bk=self.bk, bn=self.bn)
+        if plan is None:
+            if plan_key is None:
+                # keyless dynamic operand: plan inline (never cached), but
+                # still thread the cache handle so backward planning stays
+                # observable (``plan_cache.traced``) under jit/grad
+                kernel.check_platform()
+                kernel.check_geometry(
+                    a.shape[0], a.shape[1], b.shape[1], bm=self.bm, bk=self.bk, bn=self.bn
+                )
+                plan = self.plan(a)
+            else:
+                plan = self.plan(a, key=plan_key)
+        return kernel.matmul_planned(
+            plan, a, b, bn=self.bn, out_dtype=a.dtype,
+            plan_cache=self.plan_cache, plan_key=("A", plan_key),
+        )
+
+    def matmul_grads(self, a, b, g, *, plan: SparsityPlan | None = None, plan_key=None):
+        """Eager sparsity-aware cotangents ``(da, db)`` of ``a @ b``.
+
+        Runs exactly the two registry-routed backward products the
+        ``custom_vjp`` rule runs — ``da = g @ b.T`` planned over ``g``,
+        ``db = a.T @ g`` planned over ``a.T`` (a metadata transpose of the
+        forward plan).  Called with concrete arrays (manual backprop,
+        microbenchmarks), plan reuse is live in :attr:`plan_cache` and
+        observable via its hit/miss counters.
+        """
+        from repro.runtime.autodiff import PlannedVJP, planned_matmul_grads
+
         if plan is None:
             plan = self.plan(a, key=plan_key)
-        return kernel.matmul_planned(plan, a, b, bn=self.bn, out_dtype=a.dtype)
+        ctx = PlannedVJP(
+            backend=self.backend, bm=plan.bm, bk=plan.bk, bn=self.bn,
+            cache=self.plan_cache, key=("A", plan_key),
+        )
+        return planned_matmul_grads(ctx, plan.nnz, plan.idx, a, b, g)
 
     def sparse_ffn(self, x, w1, w2, *, activation: str = "relu"):
         """FFN whose second matmul exploits the activation sparsity the

@@ -6,13 +6,22 @@ microbatch's gradient reduce with the next microbatch's compute (the
 standard compute/comm overlap at scale); a straggler therefore costs at most
 one microbatch of work.
 
-The mesh may be passed explicitly or inherited from the ambient
-``repro.runtime.Runtime`` (``with runtime.use(rt):``); kernel-backend
-selection also rides on the runtime — no ``mode=`` strings here.
+``sparsity_taps=True`` instruments the three TensorDash training streams
+(paper Eq. 1-3): every step's metrics gain per-layer non-zero fractions of
+the FFN activations (``A_density``) and of the output-gradient streams at
+each layer's MLP output (``G_density``, via the zero-probe trick), plus a
+``modeled_speedup`` scalar — the work-skipping bound over the three
+training convolutions.  :func:`modeled_speedup` refines the same densities
+through the cycle-accurate ``core.perf_model`` simulator host-side (the
+paper's Fig. 14 view).
+
+Kernel-backend selection rides on the ambient ``repro.runtime.Runtime``
+(``with runtime.use(rt):``), which also supplies the mesh; passing ``mesh=``
+explicitly is deprecated (one-release shim).
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -23,20 +32,92 @@ from repro.models import model as M
 from repro.optim.adamw import OptConfig, apply_updates, global_norm, init_opt_state
 from repro.parallel.sharding import param_pspecs
 
-__all__ = ["make_train_step", "make_loss_fn", "init_train_state"]
+__all__ = ["make_train_step", "make_loss_fn", "init_train_state", "modeled_speedup"]
 
 
-def make_loss_fn(cfg: ModelConfig, mesh=None):
-    mesh = rtm.active_mesh(mesh)
+def _warn_explicit_mesh(fn_name: str) -> None:
+    warnings.warn(
+        f"{fn_name}(mesh=...) is deprecated; install the mesh on the ambient "
+        "runtime instead: `with repro.runtime.use(Runtime(mesh=mesh)):` "
+        "(shim active this release)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
-    def loss_fn(params, batch):
-        return M.loss_fn(params, cfg, batch, mesh=mesh)
+
+def _make_loss(cfg: ModelConfig, mesh):
+    def loss_fn(params, batch, probes=None, taps=None):
+        return M.loss_fn(params, cfg, batch, mesh=mesh, probes=probes, taps=taps)
 
     return loss_fn
 
 
+def make_loss_fn(cfg: ModelConfig, mesh=None):
+    if mesh is not None:
+        _warn_explicit_mesh("make_loss_fn")
+    return _make_loss(cfg, rtm.active_mesh(mesh))
+
+
 def init_train_state(cfg: ModelConfig, params):
     return init_opt_state(params)
+
+
+def _tap_stacks(cfg: ModelConfig) -> dict[str, int]:
+    """Probe-able layer stacks of this config (name -> layer count)."""
+    if cfg.family == "moe":
+        stacks = {}
+        if cfg.first_dense_layers:  # insertion order = execution order
+            stacks["dense_layers"] = cfg.first_dense_layers
+        stacks["layers"] = cfg.num_layers - cfg.first_dense_layers
+        return stacks
+    return {"layers": cfg.num_layers}
+
+
+def _density(x) -> jax.Array:
+    """Non-zero fraction per layer: collapse all but the leading axis."""
+    return jnp.mean((x != 0).astype(jnp.float32), axis=tuple(range(1, x.ndim)))
+
+
+def _tap_metrics(cfg: ModelConfig, taps: dict, gprobes: dict) -> dict:
+    """Per-layer A/G densities + the in-graph modeled speedup.
+
+    ``modeled_speedup`` is the ideal work-skipping bound: each of the three
+    training convolutions performs the same MACs, and TensorDash at best
+    prices a stream at its density — FWD at ``dA``, BWD_INPUT at ``dG``,
+    BWD_WEIGHT at ``min(dA, dG)`` (the sparser operand wins, Eq. 3).  The
+    cycle-accurate estimate (staging-depth limits, row imbalance) is the
+    host-side :func:`modeled_speedup` helper over the same densities.
+    """
+    a_parts = [
+        1.0 - taps[name]["ffn_act"].zeros / jnp.maximum(taps[name]["ffn_act"].total, 1.0)
+        for name in _tap_stacks(cfg)
+    ]
+    g_parts = [_density(gprobes[name]) for name in _tap_stacks(cfg)]
+    a_density = jnp.concatenate([jnp.atleast_1d(a) for a in a_parts])
+    g_density = jnp.concatenate([jnp.atleast_1d(g) for g in g_parts])
+    ideal = 3.0 / (a_density + g_density + jnp.minimum(a_density, g_density))
+    return {
+        "A_density": a_density,
+        "G_density": g_density,
+        "modeled_speedup": jnp.mean(ideal),
+    }
+
+
+def modeled_speedup(metrics, cfg: ModelConfig, **kw) -> dict[str, float]:
+    """Refine one step's tapped densities through ``core.perf_model``.
+
+    Host-side (call on fetched metrics, not inside jit): maps the step's
+    per-layer A/G densities onto the FFN contraction layers and runs the
+    tile simulator — one point of the paper's Fig. 14 speedup-over-training
+    curve.  ``kw`` forwards to ``perf_model.speedup_from_densities``
+    (``tile=``, ``clustering=``, ``max_t=`` ...).
+    """
+    from repro.core import perf_model as pm
+
+    a = jax.device_get(metrics["A_density"])
+    g = jax.device_get(metrics["G_density"])
+    layers = pm.ffn_layers_from_config(cfg, n_layers=len(a))
+    return pm.speedup_from_densities(a, g, layers, **kw)
 
 
 def make_train_step(
@@ -46,12 +127,25 @@ def make_train_step(
     *,
     microbatches: int = 1,
     donate: bool = True,
+    sparsity_taps: bool = False,
 ):
     """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
     metrics)``.  ``batch`` is the global batch; with ``microbatches > 1`` it
-    is split on the leading axis and gradients are accumulated in fp32."""
+    is split on the leading axis and gradients are accumulated in fp32.
+
+    ``sparsity_taps=True`` (dense/moe token-LM families) adds per-layer
+    ``A_density`` / ``G_density`` vectors and a ``modeled_speedup`` scalar
+    to the metrics; with microbatches the densities are averaged.
+    """
+    if mesh is not None:
+        _warn_explicit_mesh("make_train_step")
     mesh = rtm.active_mesh(mesh)
-    loss_fn = make_loss_fn(cfg, mesh)
+    loss_fn = _make_loss(cfg, mesh)
+    if sparsity_taps and (cfg.family not in ("dense", "moe") or cfg.frontend is not None):
+        raise ValueError(
+            f"sparsity_taps: unsupported family {cfg.family!r} / frontend "
+            f"{cfg.frontend!r} (taps probe the transformer MLP stacks)"
+        )
 
     def _constrain_grads(grads):
         # pin gradient shardings to the parameter layout right at the
@@ -67,12 +161,30 @@ def make_train_step(
             specs,
         )
 
+    def _zero_probes(batch):
+        b, s = batch["tokens"].shape
+        return {
+            name: jnp.zeros((n, b, s, cfg.d_model), jnp.float32)
+            for name, n in _tap_stacks(cfg).items()
+        }
+
     def grads_of(params, batch):
-        return jax.value_and_grad(loss_fn)(params, batch)
+        if not sparsity_taps:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads, {}
+
+        def loss_with_taps(params, probes, b):
+            taps: dict = {}
+            return loss_fn(params, b, probes=probes, taps=taps), taps
+
+        (loss, taps), (grads, gprobes) = jax.value_and_grad(
+            loss_with_taps, argnums=(0, 1), has_aux=True
+        )(params, _zero_probes(batch), batch)
+        return loss, grads, _tap_metrics(cfg, taps, gprobes)
 
     def train_step(params, opt_state, batch):
         if microbatches == 1:
-            loss, grads = grads_of(params, batch)
+            loss, grads, tapm = grads_of(params, batch)
             grads = _constrain_grads(grads)
         else:
             mb = jax.tree.map(
@@ -80,19 +192,29 @@ def make_train_step(
                 batch,
             )
             acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            tap0: dict = {}
+            if sparsity_taps:  # abstract trace only needed to size the tap carry
+                _, _, tap0 = jax.eval_shape(
+                    lambda b: grads_of(params, b), jax.tree.map(lambda x: x[0], mb)
+                )
+                tap0 = jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), tap0)
 
             def body(acc, b):
-                acc_g, acc_l = acc
-                l, g = grads_of(params, b)
+                acc_g, acc_l, acc_t = acc
+                l, g, t = grads_of(params, b)
                 acc_g = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc_g, g)
-                return (acc_g, acc_l + l), None
+                acc_t = jax.tree.map(lambda a, x: a + x / microbatches, acc_t, t)
+                return (acc_g, acc_l + l, acc_t), None
 
-            (grads, loss), _ = jax.lax.scan(body, (acc0, jnp.zeros((), jnp.float32)), mb)
+            (grads, loss, tapm), _ = jax.lax.scan(
+                body, (acc0, jnp.zeros((), jnp.float32), tap0), mb
+            )
             grads = jax.tree.map(lambda g: g / microbatches, grads)
             loss = loss / microbatches
         params, opt_state, metrics = apply_updates(params, grads, opt_state, opt_cfg)
         metrics["loss"] = loss
         metrics["param_norm"] = global_norm(params)
+        metrics.update(tapm)
         return params, opt_state, metrics
 
     return train_step

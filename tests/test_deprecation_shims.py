@@ -1,0 +1,90 @@
+"""The three one-release deprecation shims — ``mode=`` kwarg,
+``ModelConfig.ffn_kernel_mode``, explicit ``mesh=`` — each emit exactly one
+DeprecationWarning and still dispatch correctly, so their scheduled removal
+(PR 3) can delete them without surprises."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import runtime as rtm
+from repro.configs import get_config, reduce_config
+from repro.data.pipeline import SyntheticLM
+from repro.kernels import ops as kops
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
+from repro.models.common import init_params
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.runtime import Runtime
+from repro.train.step import make_loss_fn, make_train_step
+
+
+def _deprecations(ws):
+    return [w for w in ws if issubclass(w.category, DeprecationWarning)]
+
+
+def _sparse_operand(rng, m, k, bm, bk, density=0.5):
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    mask = rng.random((m // bm, k // bk)) < density
+    return jnp.asarray(
+        (a.reshape(m // bm, bm, k // bk, bk) * mask[:, None, :, None]).reshape(m, k)
+    )
+
+
+def test_ops_mode_kwarg_warns_exactly_once_and_dispatches():
+    rng = np.random.default_rng(0)
+    a = _sparse_operand(rng, 32, 64, 16, 32)
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        legacy = kops.matmul(a, b, mode="interpret", bm=16, bk=32, bn=16)
+    assert len(_deprecations(ws)) == 1, [str(w.message) for w in ws]
+    new = Runtime(backend="interpret", bm=16, bk=32, bn=16).matmul(a, b)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+
+
+def test_ffn_kernel_mode_warns_exactly_once_and_dispatches():
+    base = reduce_config(get_config("deepseek-7b"))
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        cfg = dataclasses.replace(base, ffn_kernel_mode="interpret")
+    assert len(_deprecations(ws)) == 1, [str(w.message) for w in ws]
+    assert rtm.resolve(cfg=cfg).backend == "interpret"
+    # the default value stays silent
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        dataclasses.replace(base, activation="relu")
+    assert len(_deprecations(ws)) == 0
+
+
+def test_explicit_mesh_warns_exactly_once_and_dispatches():
+    cfg = reduce_config(get_config("deepseek-7b"))
+    mesh = make_local_mesh()
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        step = make_train_step(cfg, OptConfig(lr=1e-3), mesh)
+    assert len(_deprecations(ws)) == 1, [str(w.message) for w in ws]
+    # shim still dispatches: the step runs under the explicitly passed mesh
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=8, global_batch=2, seed=0)
+    _, _, m = step(params, init_opt_state(params), data.batch_at(0))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_make_loss_fn_mesh_warns_exactly_once():
+    cfg = reduce_config(get_config("deepseek-7b"))
+    mesh = make_local_mesh()
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        make_loss_fn(cfg, mesh)
+    assert len(_deprecations(ws)) == 1, [str(w.message) for w in ws]
+    # ambient-resolved mesh stays silent
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        with rtm.use(Runtime(mesh=mesh)):
+            make_loss_fn(cfg)
+            make_train_step(cfg, OptConfig())
+    assert len(_deprecations(ws)) == 0, [str(w.message) for w in ws]

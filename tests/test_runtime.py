@@ -130,7 +130,7 @@ def test_plan_cache_hit_miss_semantics():
     rt = Runtime(backend="interpret", bm=16, bk=32, bn=16)
     a1 = _sparse_operand(rng, 32, 64, 16, 32)
     p1 = rt.plan(a1, key="w")
-    assert rt.plan_cache.stats() == {"entries": 1, "hits": 0, "misses": 1}
+    assert rt.plan_cache.stats() == {"entries": 1, "hits": 0, "misses": 1, "traced": 0}
     assert rt.plan(a1, key="w") is p1  # identity-validated hit
     assert rt.plan_cache.hits == 1
     # same key, different array -> miss, entry replaced (never stale reuse)
@@ -172,8 +172,9 @@ def test_plan_cache_fifo_capacity():
 
 
 def test_sparse_backend_is_differentiable():
-    """Training through the planned Pallas matmul: dense VJP (exact, since
-    only all-zero blocks are elided forward)."""
+    """Training through the planned Pallas matmul: the sparsity-aware VJP
+    yields the dense-math cotangents (only all-zero blocks are elided in
+    the registry-routed backward products — see tests/test_backward_planned.py)."""
     rng = np.random.default_rng(8)
     a = _sparse_operand(rng, 32, 64, 16, 32)
     b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
