@@ -4,8 +4,8 @@ Prints ``name,us_per_call,derived`` CSV.  ``derived`` is a semicolon-joined
 summary of the reproduced numbers (no commas, CSV-safe).
 
 ``--smoke`` runs only the fast micro benchmarks (kernel, scheduler, plan
-cache, sparse backward) — the CI job that keeps plan-cache / hot-path
-regressions visible.  ``--json out.json`` additionally persists the results
+cache, sparse backward, serving decode) — the CI job that keeps plan-cache /
+hot-path regressions visible.  ``--json out.json`` additionally persists the results
 (us-per-call + derived numbers per bench) for artifact upload and the
 ``benchmarks/compare.py`` regression gate against ``BENCH_baseline.json``.
 
@@ -215,6 +215,56 @@ def bench_backward_planned():
     )
 
 
+def bench_serve_decode():
+    """Serving throughput: the continuous-batching engine's jitted
+    ``lax.scan`` decode vs the pre-engine per-token eager Python loop, at
+    batch 8 (where the amortized plan/dispatch costs must pay off)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ModelConfig
+    from repro.models import model as M
+    from repro.models.common import init_params
+    from repro.serve.engine import generate
+
+    cfg = ModelConfig(
+        name="serve-bench", family="dense", num_layers=2, d_model=32,
+        vocab_size=64, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        activation="relu", q_chunk=16, remat=False,
+    )
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    b, s, max_new = 8, 8, 17
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+
+    def eager_loop():
+        # the old single-tenant generate: one eager decode_step per token
+        logits, caches = M.prefill(params, cfg, {"tokens": prompts})
+        from repro.runtime import Runtime
+
+        caches = Runtime().grow_caches(cfg, caches, b, s + max_new)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for i in range(max_new - 1):
+            logits, caches = M.decode_step(
+                params, cfg, caches, {"tokens": tok[:, None]}, jnp.int32(s + i)
+            )
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return tok.block_until_ready()
+
+    def engine():
+        return generate(params, cfg, prompts, max_new=max_new).block_until_ready()
+
+    engine()  # warm: trace + compile the chunked scan once
+    eager_loop()
+    eng_us = _best_of(engine, reps=5)
+    old_us = _best_of(eager_loop, reps=5)
+    toks = b * max_new
+    eng_tps, old_tps = toks / (eng_us / 1e6), toks / (old_us / 1e6)
+    return eng_us, (
+        f"engine={eng_tps:.0f}tok/s eager_loop={old_tps:.0f}tok/s "
+        f"speedup={eng_tps / max(old_tps, 1e-9):.2f}x batch={b} new={max_new}"
+    )
+
+
 def bench_arch_projection():
     from benchmarks.arch_projection import run
 
@@ -234,6 +284,7 @@ BENCHES = [
     ("tensordash_spmm_micro", bench_spmm_kernel),
     ("plan_cache_micro", bench_plan_cache),
     ("backward_planned_micro", bench_backward_planned),
+    ("serve_decode_micro", bench_serve_decode),
     ("arch_tensordash_projection", bench_arch_projection),
 ]
 
@@ -242,6 +293,7 @@ SMOKE = {
     "tensordash_spmm_micro",
     "plan_cache_micro",
     "backward_planned_micro",
+    "serve_decode_micro",
 }
 
 

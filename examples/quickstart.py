@@ -45,8 +45,7 @@ def main():
     print(f"conv layer projection: {res.speedup:.2f}x over the dense accelerator")
 
     # 5. The repro.runtime execution API: pick a kernel backend, plan once,
-    #    execute block-sparse.  (`mode=` strings / ffn_kernel_mode are
-    #    deprecated shims over exactly this.)
+    #    execute block-sparse.
     from repro import runtime
 
     rt = runtime.Runtime(backend="interpret", bm=16, bk=32, bn=16)

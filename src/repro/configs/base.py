@@ -71,30 +71,8 @@ class ModelConfig:
     unroll: bool = False  # dry-run: unroll scans so cost_analysis counts every layer
     taps: bool = False  # TensorDash sparsity instrumentation
     kv_cache_quant: bool = False  # int8 KV cache (GQA archs; §Perf iteration 7)
-    # DEPRECATED: use repro.runtime.Runtime(backend=...) — kept one release as
-    # a shim; a non-default value resolves to a Runtime via self.runtime().
-    ffn_kernel_mode: str = "dense"
     # capability flags
     sub_quadratic: bool = False  # may run long_500k
-
-    def __post_init__(self):
-        if self.ffn_kernel_mode != "dense":
-            import warnings
-
-            warnings.warn(
-                "ModelConfig.ffn_kernel_mode is deprecated; construct a "
-                "repro.runtime.Runtime(backend=...) and install it with "
-                "`with repro.runtime.use(rt):` (shim active this release)",
-                DeprecationWarning,
-                stacklevel=3,
-            )
-
-    def runtime(self, mesh=None):
-        """Deprecation shim: the ``Runtime`` this config's old string maps to."""
-        from repro.runtime import resolve
-
-        rt = resolve(cfg=self)
-        return rt.replace(mesh=mesh) if mesh is not None else rt
 
     @property
     def resolved_head_dim(self) -> int:

@@ -1,7 +1,7 @@
 """Pallas TPU kernels (validated in interpret mode on CPU).
 
-Backend selection lives in ``repro.runtime`` (the ``mode=`` kwargs on
-``repro.kernels.ops`` are deprecation shims over it).
+Backend selection lives in ``repro.runtime``; ``repro.kernels.ops`` wrappers
+take ``runtime=`` (the old ``mode=`` shims have been removed).
 """
 from repro.kernels.tensordash_spmm import plan_blocks, tensordash_matmul, tensordash_matmul_planned
 from repro.kernels.block_mask import block_zero_mask

@@ -1,16 +1,11 @@
 """Public wrappers around the TensorDash kernels.
 
-.. deprecated::
-    The ``mode=`` string kwarg is a deprecation shim.  Execution policy now
-    lives in :class:`repro.runtime.Runtime` (backend registry + block
-    geometry + plan cache); pass ``runtime=`` explicitly or install one with
-    ``with repro.runtime.use(rt):``.  ``mode=`` strings map 1:1 onto backend
-    names (``"dense" | "pallas" | "interpret" | "reference"``) and will be
-    removed after one release.
+Execution policy lives in :class:`repro.runtime.Runtime` (backend registry +
+block geometry + plan cache): pass ``runtime=`` explicitly or install one
+with ``with repro.runtime.use(rt):``.  The PR-1 era ``mode=`` string kwarg
+completed its one-release deprecation cycle and has been removed.
 """
 from __future__ import annotations
-
-import warnings
 
 from repro import runtime as rtm
 from repro.kernels.tensordash_spmm import (
@@ -32,20 +27,9 @@ __all__ = [
     "tensordash_matmul_planned",
 ]
 
-_GEOM_DEFAULTS = (128, 512, 128)
 
-
-def _resolve(mode, runtime, bm, bk, bn):
-    if mode is not None:
-        warnings.warn(
-            "kernels.ops mode= is deprecated; pass runtime=repro.runtime.Runtime("
-            f"backend={mode!r}, ...) or use `with repro.runtime.use(rt):`",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        rt = rtm.Runtime(backend=mode)
-    else:
-        rt = rtm.resolve(runtime)
+def _resolve(runtime, bm, bk, bn):
+    rt = rtm.resolve(runtime)
     geom = {
         k: v
         for k, v in zip(("bm", "bk", "bn"), (bm, bk, bn))
@@ -54,10 +38,10 @@ def _resolve(mode, runtime, bm, bk, bn):
     return rt.replace(**geom) if geom else rt
 
 
-def matmul(a, b, *, mode: str | None = None, runtime: "rtm.Runtime | None" = None,
+def matmul(a, b, *, runtime: "rtm.Runtime | None" = None,
            bm: int | None = None, bk: int | None = None, bn: int | None = None):
     """``a @ b`` on the resolved runtime's kernel backend."""
-    return _resolve(mode, runtime, bm, bk, bn).matmul(a, b)
+    return _resolve(runtime, bm, bk, bn).matmul(a, b)
 
 
 def matmul_grads(a, b, g, *, runtime: "rtm.Runtime | None" = None,
@@ -66,10 +50,10 @@ def matmul_grads(a, b, g, *, runtime: "rtm.Runtime | None" = None,
     output cotangent ``g`` — the registry-routed backward products (paper
     Eq. 2-3) ``jax.grad`` executes, exposed for manual backprop and
     microbenchmarks (plan-cache reuse is live and observable here)."""
-    return _resolve(None, runtime, bm, bk, bn).matmul_grads(a, b, g)
+    return _resolve(runtime, bm, bk, bn).matmul_grads(a, b, g)
 
 
-def sparse_ffn(x, w1, w2, *, activation: str = "relu", mode: str | None = None,
+def sparse_ffn(x, w1, w2, *, activation: str = "relu",
                runtime: "rtm.Runtime | None" = None,
                bm: int | None = None, bk: int | None = None, bn: int | None = None):
     """FFN whose second matmul exploits the dynamic sparsity the first one's
@@ -79,6 +63,6 @@ def sparse_ffn(x, w1, w2, *, activation: str = "relu", mode: str | None = None,
     paper's Eq. (1) activations are; the kernel converts that into skipped
     MXU blocks.  Token dimension(s) of ``x`` are flattened to rows.
     """
-    return _resolve(mode, runtime, bm, bk, bn).sparse_ffn(
+    return _resolve(runtime, bm, bk, bn).sparse_ffn(
         x, w1, w2, activation=activation
     )

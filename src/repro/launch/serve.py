@@ -1,13 +1,17 @@
-"""Batched serving launcher: continuous prefill + decode over a request
-stream with a fixed-capacity batch (static shapes; slot-recycling).
+"""Continuous-batching serving launcher: replay a request arrival stream
+through the :class:`repro.serve.engine.ServeEngine` and report latency /
+throughput.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --requests 8 --new 8 --backend interpret
+        --requests 16 --slots 8 --new 8 --backend interpret --rate 0
 
-One ``repro.runtime.Runtime`` carries the whole execution policy (kernel
-backend, block geometry, mesh, plan cache); cache growth is layout-driven
-via ``rt.grow_caches`` instead of the old pad-the-axis-that-looks-like-a-
-sequence heuristic.
+``--rate`` requests/second shapes the arrival stream (0 = all requests
+arrive at t=0, a pure throughput run); prompt lengths and decode budgets are
+jittered per request so the engine's slot backfill actually exercises.  One
+``repro.runtime.Runtime`` carries the whole execution policy (kernel
+backend, block geometry, mesh, plan cache); the decode loop is one jitted
+``lax.scan`` program whose trace count and plan-cache hit rates are printed
+alongside the latency percentiles.
 """
 from __future__ import annotations
 
@@ -15,24 +19,37 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro import runtime as rtm
 from repro.configs import get_config, reduce_config
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.models.common import init_params
-from repro.serve.engine import decode_one, prefill_step
+from repro.serve import engine as serve_engine
+from repro.serve.engine import ServeEngine
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8,
+                    help="concurrent batch slots (the packed decode batch)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps fused per jitted scan call")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="arrival rate, requests/sec (0 = all at t=0)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="dense", choices=rtm.available_backends())
     ap.add_argument("--block", type=int, nargs=3, metavar=("BM", "BK", "BN"),
                     default=None, help="block geometry override")
@@ -46,32 +63,58 @@ def main() -> None:
         mesh = make_production_mesh()
     geom = dict(zip(("bm", "bk", "bn"), args.block)) if args.block else {}
     rt = rtm.Runtime(backend=args.backend, mesh=mesh, **geom)
-    rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU) vs silent dense fallback
+    rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU)
 
     params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
-    key = jax.random.PRNGKey(1)
-    done_tokens = 0
-    t0 = time.time()
-    with rtm.use(rt):
-        # waves of `batch` requests (static-shape batching)
-        for wave in range(0, args.requests, args.batch):
-            key, sub = jax.random.split(key)
-            prompts = jax.random.randint(sub, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-            logits, caches = prefill_step(params, cfg, {"tokens": prompts})
-            s = args.prompt_len
-            caches = rt.grow_caches(cfg, caches, args.batch, s + args.new)
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            for i in range(args.new - 1):
-                logits, caches = decode_one(
-                    params, cfg, caches, {"tokens": tok[:, None]}, jnp.int32(s + i)
-                )
-                tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            done_tokens += args.batch * args.new
-            print(f"wave {wave//args.batch}: {args.batch} requests x {args.new} tokens")
-    dt = time.time() - t0
-    plans = rt.plan_cache.stats()
-    print(f"served {done_tokens} tokens in {dt:.1f}s ({done_tokens/dt:.1f} tok/s)")
-    print(f"backend={rt.backend} plan cache: {plans['hits']} hits / {plans['misses']} misses")
+    rng = np.random.default_rng(args.seed)
+    # jitter lengths so slots finish at different times and backfill runs
+    plens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1,
+                         size=args.requests)
+    budgets = rng.integers(max(args.new // 2, 1), args.new + 1,
+                           size=args.requests)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(s)).astype(np.int32)
+               for s in plens]
+    arrivals = (np.zeros(args.requests) if args.rate <= 0
+                else np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests)))
+
+    max_len = args.max_len or (args.prompt_len + args.new)
+    eng = ServeEngine(
+        params, cfg, slots=args.slots, max_len=max_len, rt=rt,
+        temperature=args.temperature, seed=args.seed, chunk=args.chunk,
+    )
+    # arrivals are scheduled on the engine clock, so latency percentiles
+    # measure from the modeled arrival — queueing delay (a request waiting
+    # out an in-flight decode chunk) is charged to the request, not hidden
+    arrivals = arrivals + eng.now()
+    t_start = time.monotonic()
+    submitted = 0
+    while submitted < args.requests or eng.sched.has_work:
+        now = eng.now()
+        while submitted < args.requests and arrivals[submitted] <= now:
+            eng.submit(prompts[submitted], max_new=int(budgets[submitted]),
+                       arrival=float(arrivals[submitted]))
+            submitted += 1
+        if not eng.sched.has_work:
+            # idle before the next arrival: wait it out
+            time.sleep(min(max(arrivals[submitted] - now, 0.0), 0.05))
+            continue
+        eng.step()
+    dt = time.monotonic() - t_start
+
+    reqs = list(eng._requests.values())
+    ttft = [r.t_first - r.arrival for r in reqs]
+    e2e = [r.t_finish - r.arrival for r in reqs if r.finished]
+    st = eng.stats()
+    pc = st["plan_cache"]
+    print(f"arch={cfg.name} backend={rt.backend} slots={args.slots} "
+          f"chunk={args.chunk} requests={args.requests}")
+    print(f"served {st['tokens_out']} tokens in {dt:.2f}s "
+          f"({st['tokens_out']/dt:.1f} tok/s); decode program traced "
+          f"{st['decode_traces']}x, {st['chunks_run']} chunks")
+    print(f"latency  ttft p50={_pct(ttft,50)*1e3:.0f}ms p95={_pct(ttft,95)*1e3:.0f}ms"
+          f"   e2e p50={_pct(e2e,50)*1e3:.0f}ms p95={_pct(e2e,95)*1e3:.0f}ms")
+    print(f"plan cache: {pc['hits']} hits / {pc['misses']} misses / "
+          f"{pc['traced']} traced-in-program")
 
 
 if __name__ == "__main__":

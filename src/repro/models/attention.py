@@ -97,7 +97,11 @@ def _project_qkv(params, cfg: AttnConfig, x, positions, mesh=None):
 
 
 def _attend(cfg: AttnConfig, q, k, v, q_pos, k_pos, window):
-    """q [B,T,H,D]; k,v [B,S,KVH,D]; q_pos [T]; k_pos [S] -> [B,T,H,D]."""
+    """q [B,T,H,D]; k,v [B,S,KVH,D]; q_pos [T] or [B,T]; k_pos [S].
+
+    A 2-D ``q_pos`` gives every batch row its own causal frontier — the
+    continuous-batching decode path, where each slot sits at a different
+    sequence position.  Returns [B,T,H,D]."""
     b, t, h, hd = q.shape
     kh = k.shape[2]
     g = h // kh
@@ -107,8 +111,10 @@ def _attend(cfg: AttnConfig, q, k, v, q_pos, k_pos, window):
         "btkgd,bskd->bkgts", qg, k, preferred_element_type=jnp.float32
     ) * scale
     scores = softcap(scores, cfg.attn_softcap)
-    mask = causal_mask(q_pos, k_pos, window)  # [T, S]
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    mask = causal_mask(q_pos, k_pos, window)  # [T, S] or [B, T, S]
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
     return out.reshape(b, t, h, hd)
@@ -217,33 +223,48 @@ def attention_decode(
     mesh=None,
 ):
     """One-token decode.  ``x [B, 1, d]``, cache pre-filled up to ``pos``
-    (exclusive); the new token is written at index ``pos``.  Returns
+    (exclusive); the new token is written at index ``pos``.  ``pos`` is a
+    scalar (all rows at the same position) or an int32 ``[B]`` vector (the
+    continuous-batching path: each batch slot at its own position).  Returns
     ``(y [B,1,d], new_cache)``."""
     b = x.shape[0]
     s_max = cache.k.shape[1]
-    positions = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos
+    per_row = jnp.ndim(pos) == 1
+    pos = jnp.asarray(pos, jnp.int32)
     if cfg.mrope_sections is not None:
-        positions = jnp.broadcast_to(
-            jnp.asarray(pos, jnp.int32).reshape(-1), (1,)
-        )[None, None, :].repeat(3, axis=1).repeat(b, axis=0)  # [B,3,1] text-mode
+        base = jnp.broadcast_to(pos.reshape(-1, 1), (b, 1))
+        positions = base[:, None, :].repeat(3, axis=1)  # [B,3,1] text-mode
+    elif per_row:
+        positions = pos.reshape(b, 1)  # per-row rope tables
+    else:
+        positions = pos.reshape(1)
+
+    def write(full, new):
+        """Insert the step's [B,1,...] values at each row's position."""
+        if per_row:
+            return full.at[jnp.arange(b), pos].set(new[:, 0].astype(full.dtype))
+        start = (0, pos) + (0,) * (full.ndim - 2)
+        return jax.lax.dynamic_update_slice(full, new.astype(full.dtype), start)
+
     q, k, v = _project_qkv(params, cfg, x, positions, mesh)
     if cfg.kv_quant:
         kq, ks = _kv_quant_rows(k)
         vq, vs = _kv_quant_rows(v)
         new_cache = KVCache(
-            k=jax.lax.dynamic_update_slice(cache.k, kq, (0, pos, 0, 0)),
-            v=jax.lax.dynamic_update_slice(cache.v, vq, (0, pos, 0, 0)),
-            k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, pos, 0, 0)),
-            v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, pos, 0, 0)),
+            k=write(cache.k, kq),
+            v=write(cache.v, vq),
+            k_scale=write(cache.k_scale, ks),
+            v_scale=write(cache.v_scale, vs),
         )
         k_cache = _kv_dequant(new_cache.k, new_cache.k_scale, x.dtype)
         v_cache = _kv_dequant(new_cache.v, new_cache.v_scale, x.dtype)
     else:
-        k_cache = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0))
-    q_pos = jnp.asarray(pos, jnp.int32).reshape(1)
+        k_cache = write(cache.k, k)
+        v_cache = write(cache.v, v)
+    q_pos = pos.reshape(b, 1) if per_row else pos.reshape(1)
     sw = cfg.sliding_window
-    if sw is not None and isinstance(is_global, (bool, int)) and not is_global and sw < s_max:
+    if (sw is not None and isinstance(is_global, (bool, int)) and not is_global
+            and sw < s_max and not per_row):
         # static sliding window: read only the trailing `window` cache slots
         kh, hd = cache.k.shape[2], cache.k.shape[3]
         start = jnp.clip(pos - sw + 1, 0, s_max - sw)

@@ -138,14 +138,25 @@ def init_mla_cache(cfg: MLAConfig, batch: int, max_len: int, dtype=jnp.bfloat16)
 
 
 def mla_decode(params, cfg: MLAConfig, x, cache: MLACache, pos, mesh=None):
-    """Absorbed one-token decode over the compressed latent cache."""
+    """Absorbed one-token decode over the compressed latent cache.
+
+    ``pos`` is a scalar or an int32 ``[B]`` vector (continuous batching:
+    each batch slot decodes at its own sequence position)."""
     b = x.shape[0]
     h = cfg.num_heads
-    positions = jnp.asarray(pos, jnp.int32).reshape(1)
+    per_row = jnp.ndim(pos) == 1
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos.reshape(b, 1) if per_row else pos.reshape(1)
     q_nope, q_pe = _queries(params, cfg, x, positions, mesh)  # [B,1,H,*]
     c_kv_new, k_pe_new = _latent_kv(params, cfg, x, positions)
-    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_kv_new.astype(cache.c_kv.dtype), (0, pos, 0))
-    k_pe = jax.lax.dynamic_update_slice(cache.k_pe, k_pe_new.astype(cache.k_pe.dtype), (0, pos, 0))
+
+    def write(full, new):
+        if per_row:
+            return full.at[jnp.arange(b), pos].set(new[:, 0].astype(full.dtype))
+        return jax.lax.dynamic_update_slice(full, new.astype(full.dtype), (0, pos, 0))
+
+    c_kv = write(cache.c_kv, c_kv_new)
+    k_pe = write(cache.k_pe, k_pe_new)
 
     wkv_b = params["wkv_b"].reshape(cfg.kv_lora_rank, h, -1)
     w_uk = wkv_b[..., : cfg.qk_nope_head_dim]  # [lora, H, nope]
@@ -158,8 +169,10 @@ def mla_decode(params, cfg: MLAConfig, x, cache: MLACache, pos, mesh=None):
         + jnp.einsum("bthd,bsd->bhts", q_pe, k_pe, preferred_element_type=jnp.float32)
     ) * scale
     k_pos = jnp.arange(cache.c_kv.shape[1])
-    mask = causal_mask(positions, k_pos)
-    scores = jnp.where(mask[None, None], scores, -1e30)
+    mask = causal_mask(positions, k_pos)  # [T, S] or per-row [B, T, S]
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     ctx_lat = jnp.einsum("bhts,bsl->bthl", probs, c_kv)  # [B,1,H,lora]
     out = jnp.einsum("bthl,lhd->bthd", ctx_lat, w_uv).reshape(b, 1, h * cfg.v_head_dim)

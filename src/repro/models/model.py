@@ -10,7 +10,11 @@
 Execution policy resolves through ``repro.runtime`` (ambient ``Runtime`` or
 explicit ``mesh=``); under a sparse runtime the LM head replays a cached
 weight-side ``SparsityPlan`` (keyed per head array) so serving pays the
-planning cost once at prefill.  ``cfg.ffn_kernel_mode`` is deprecated.
+planning cost once at prefill.
+
+``decode_step``'s ``pos`` is either a scalar (every row at the same
+position — the single-wave path) or an int32 ``[B]`` vector (continuous
+batching: each batch slot decodes at its own sequence position).
 """
 from __future__ import annotations
 

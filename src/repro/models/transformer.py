@@ -6,8 +6,8 @@ differences (Gemma-2 local/global alternation) ride along as scanned flags.
 
 Execution policy (kernel backend, block geometry, mesh) is resolved through
 ``repro.runtime``: pass a mesh explicitly or install a ``Runtime`` with
-``with repro.runtime.use(rt):``.  The old ``cfg.ffn_kernel_mode`` string is
-deprecated and honoured only as a shim that builds a ``Runtime``.
+``with repro.runtime.use(rt):``.  Under a sparse runtime the block geometry
+auto-clamps to the operand shapes — there is no dense fallback path.
 """
 from __future__ import annotations
 
@@ -119,20 +119,20 @@ def mlp_specs(cfg: ModelConfig, d_ff: int) -> dict:
 
 def mlp_fwd(params, cfg: ModelConfig, x, taps: dict | None = None, mesh=None, rt=None):
     act = ACTIVATIONS[cfg.activation]
-    rt = rtm.resolve(rt, cfg)
+    rt = rtm.resolve(rt)
     mesh = mesh if mesh is not None else rt.mesh
     if cfg.mlp_gated:
         if rt.wants_sparse and cfg.activation == "relu":
-            # TensorDash kernel path: second matmul skips zero blocks
+            # TensorDash kernel path: second matmul skips zero blocks.  The
+            # runtime clamps its block geometry to the operand shapes, so
+            # odd token counts plan at a finer granularity instead of
+            # silently running dense.
             lead = x.shape[:-1]
             h = act((x @ params["w_gate"])) * (x @ params["w_up"])
             if taps is not None:
                 taps["ffn_act"] = sps.measure(h)
             h2 = h.reshape(-1, h.shape[-1])
-            if rt.supports_matmul(h2.shape, params["w_down"].shape):
-                return rt.matmul(h2, params["w_down"]).reshape(*lead, -1)
-            _warn_dense_fallback(rt, h2.shape, params["w_down"].shape)
-            return (h2 @ params["w_down"]).reshape(*lead, -1)
+            return rt.matmul(h2, params["w_down"]).reshape(*lead, -1)
         h = act(x @ params["w_gate"]) * (x @ params["w_up"])
     else:
         h = act(x @ params["w_up"])
@@ -140,21 +140,6 @@ def mlp_fwd(params, cfg: ModelConfig, x, taps: dict | None = None, mesh=None, rt
     if taps is not None:
         taps["ffn_act"] = sps.measure(h)
     return h @ params["w_down"]
-
-
-def _warn_dense_fallback(rt, a_shape, b_shape):
-    # a sparse backend was requested but the geometry doesn't divide: say so
-    # instead of silently reporting sparse-labelled dense numbers (fires
-    # once per call site / trace)
-    import warnings
-
-    warnings.warn(
-        f"runtime backend {rt.backend!r} cannot run {tuple(a_shape)} @ "
-        f"{tuple(b_shape)} with blocks bm={rt.bm} bk={rt.bk} bn={rt.bn}; "
-        "falling back to dense XLA for this matmul",
-        RuntimeWarning,
-        stacklevel=3,
-    )
 
 
 def head_matmul(cfg: ModelConfig, h, lm_head):
@@ -165,16 +150,18 @@ def head_matmul(cfg: ModelConfig, h, lm_head):
     subsequent call — prefill plans, decode steps cache-hit (the software
     analogue of the paper's amortized backside scheduler, §3.7).  Weights
     are static across a generation, so the replay is numerically exact; the
-    cache validates hits by array identity.
+    cache validates hits by array identity.  Inside a jitted decode loop the
+    plan is part of the traced program instead (``PlanCache.traced``): XLA
+    hoists it out of the scan, so it is still computed once per call, not
+    per token.
     """
-    rt = rtm.resolve(cfg=cfg)
+    del cfg
+    rt = rtm.resolve()
     b, s, d = h.shape
-    h2 = h.reshape(b * s, d)
     if rt.wants_sparse:
-        if rt.supports_matmul(h2.shape, lm_head.shape, side="B"):
-            out = rt.matmul(h2, lm_head, plan_key=("lm_head", id(lm_head)), side="B")
-            return out.reshape(b, s, -1)
-        _warn_dense_fallback(rt, h2.shape, lm_head.shape)
+        h2 = h.reshape(b * s, d)
+        out = rt.matmul(h2, lm_head, plan_key=("lm_head", id(lm_head)), side="B")
+        return out.reshape(b, s, -1)
     return h @ lm_head
 
 

@@ -9,8 +9,9 @@
         logits = model.forward(params, cfg, batch)
     print(rt.plan(a).stats(), rt.plan_cache.stats())
 
-Replaces the deprecated ``mode=`` kwargs on ``repro.kernels.ops``, the
-``ModelConfig.ffn_kernel_mode`` string and hand-threaded ``mesh=`` state.
+The single source of execution policy — the PR-1 era ``mode=`` kwargs,
+``ModelConfig.ffn_kernel_mode`` string and hand-threaded ``mesh=`` state
+completed their deprecation cycle and have been removed.
 """
 from repro.runtime.autodiff import PlannedVJP, planned_matmul, planned_matmul_grads
 from repro.runtime.backends import (
@@ -24,6 +25,7 @@ from repro.runtime.plan import PlanCache, SparsityPlan, plan_operand
 from repro.runtime.runtime import (
     Runtime,
     active_mesh,
+    cache_batch_axes,
     current,
     default_runtime,
     resolve,
@@ -37,6 +39,7 @@ __all__ = [
     "resolve",
     "active_mesh",
     "default_runtime",
+    "cache_batch_axes",
     "KernelBackend",
     "BackendCapabilityError",
     "register_backend",

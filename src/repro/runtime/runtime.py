@@ -10,12 +10,20 @@ Resolution precedence (``resolve``):
 
 1. an explicitly passed ``Runtime``;
 2. the ambient runtime installed by :func:`use`;
-3. the deprecated ``ModelConfig.ffn_kernel_mode`` shim;
-4. the process-wide default (dense backend, no mesh).
+3. the process-wide default (dense backend, no mesh).
 
-The old entry points (``mode=`` kwargs on ``repro.kernels.ops``,
-``ModelConfig.ffn_kernel_mode``, hand-threaded ``mesh=``) remain as thin
-deprecation shims for one release; new code should construct a ``Runtime``.
+The PR-1 era entry points (``mode=`` kwargs on ``repro.kernels.ops``,
+``ModelConfig.ffn_kernel_mode``, hand-threaded ``mesh=`` on the train-step
+factories) completed their one-release deprecation cycle and are gone; all
+code constructs a ``Runtime``.
+
+Block geometry is a *target*, not a contract: when an operand is smaller
+than (or indivisible by) ``bm/bk/bn``, planned execution auto-clamps each
+block dim to the largest divisor of the operand dim (:meth:`Runtime.fit`)
+instead of silently falling back to dense XLA.  Clamping never changes
+numerics — the planned executors are bit-exact across backends at any
+geometry — it only changes the block granularity at which all-zero work is
+skipped.
 """
 from __future__ import annotations
 
@@ -38,7 +46,16 @@ __all__ = [
     "resolve",
     "active_mesh",
     "default_runtime",
+    "cache_batch_axes",
 ]
+
+
+def _fit_block(block: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``block`` (always >= 1)."""
+    b = max(1, min(block, dim))
+    while dim % b:
+        b -= 1
+    return b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,14 +113,33 @@ class Runtime:
             return plan_operand(operand, bm, self.bk, side=side)
         return self.plan_cache.get_or_build(key, a, bm, self.bk, side=side)
 
-    def supports_matmul(self, a_shape, b_shape, *, side: str = "A") -> bool:
-        """Can the backend run ``a @ b`` block-sparse at this geometry?"""
+    def fit(self, a_shape, b_shape) -> "Runtime":
+        """This runtime with block geometry clamped to ``a @ b``'s shapes.
+
+        Each of ``bm/bk/bn`` is reduced to the largest divisor of the
+        corresponding operand dim, so planned execution never needs a dense
+        escape hatch for small or odd operands (e.g. a 3-token microbatch
+        under bm=128 plans with bm=3).  The plan cache handle is shared —
+        clamped geometry is part of every cache key, so fitted and unfitted
+        plans never collide.  On a real TPU, MXU-aligned shapes should still
+        be preferred; clamping preserves correctness, not peak throughput.
+        """
         m, k = a_shape
         n = b_shape[1]
-        if side == "B":
-            # executed as (b.T @ a.T).T: planned rows over N, lanes over M
-            return self.kernel.supports(n, k, m, bm=self.bn, bk=self.bk, bn=self.bm)
-        return self.kernel.supports(m, k, n, bm=self.bm, bk=self.bk, bn=self.bn)
+        bm, bk, bn = _fit_block(self.bm, m), _fit_block(self.bk, k), _fit_block(self.bn, n)
+        if (bm, bk, bn) == (self.bm, self.bk, self.bn):
+            return self
+        return self.replace(bm=bm, bk=bk, bn=bn)
+
+    def supports_matmul(self, a_shape, b_shape, *, side: str = "A") -> bool:
+        """Can the backend run ``a @ b`` block-sparse here?  Geometry always
+        fits (it auto-clamps, see :meth:`fit`); only the platform can say no."""
+        del a_shape, b_shape, side
+        try:
+            self.kernel.check_platform()
+            return True
+        except Exception:
+            return False
 
     # -- execution ---------------------------------------------------------
     def matmul(self, a, b, *, plan: SparsityPlan | None = None, plan_key=None, side: str = "A"):
@@ -113,7 +149,8 @@ class Runtime:
         ``side="B"`` exploits (static, typically weight) sparsity of ``b``,
         executed through the same kernel as ``(b.T @ a.T).T``.  ``plan_key``
         routes planning through the keyed cache — the serving decode loop's
-        amortization path.
+        amortization path.  Block geometry auto-clamps to the operand shapes
+        (:meth:`fit`): there is no silent dense fallback for small operands.
 
         Differentiable: ``jax.grad`` through a planned matmul executes both
         gradient products (paper Eq. 2-3) through the backend registry with
@@ -132,11 +169,14 @@ class Runtime:
         kernel = self.kernel
         if not kernel.sparse and plan is None and plan_key is None:
             return kernel.matmul(a, b, bm=self.bm, bk=self.bk, bn=self.bn)
+        # clamp block geometry to the operand shapes; with an explicit plan
+        # the plan's own geometry governs and only the lane dim is fitted
+        rt = self if plan is not None else self.fit(a.shape, b.shape)
         if side == "B":
             if plan is None:
-                plan = self.plan(b, key=plan_key, side="B")
+                plan = rt.plan(b, key=plan_key, side="B")
             out_t = kernel.matmul_planned(
-                plan, b.T, a.T, bn=self.bm, out_dtype=a.dtype,
+                plan, b.T, a.T, bn=_fit_block(rt.bm, a.shape[0]), out_dtype=a.dtype,
                 plan_cache=self.plan_cache, plan_key=("B", plan_key),
             )
             return out_t.T
@@ -146,14 +186,11 @@ class Runtime:
                 # still thread the cache handle so backward planning stays
                 # observable (``plan_cache.traced``) under jit/grad
                 kernel.check_platform()
-                kernel.check_geometry(
-                    a.shape[0], a.shape[1], b.shape[1], bm=self.bm, bk=self.bk, bn=self.bn
-                )
-                plan = self.plan(a)
+                plan = rt.plan(a)
             else:
-                plan = self.plan(a, key=plan_key)
+                plan = rt.plan(a, key=plan_key)
         return kernel.matmul_planned(
-            plan, a, b, bn=self.bn, out_dtype=a.dtype,
+            plan, a, b, bn=_fit_block(rt.bn, b.shape[1]), out_dtype=a.dtype,
             plan_cache=self.plan_cache, plan_key=("A", plan_key),
         )
 
@@ -170,9 +207,10 @@ class Runtime:
         from repro.runtime.autodiff import PlannedVJP, planned_matmul_grads
 
         if plan is None:
-            plan = self.plan(a, key=plan_key)
+            plan = self.fit(a.shape, b.shape).plan(a, key=plan_key)
         ctx = PlannedVJP(
-            backend=self.backend, bm=plan.bm, bk=plan.bk, bn=self.bn,
+            backend=self.backend, bm=plan.bm, bk=plan.bk,
+            bn=_fit_block(self.bn, g.shape[1]),
             cache=self.plan_cache, key=("A", plan_key),
         )
         return planned_matmul_grads(ctx, plan.nnz, plan.idx, a, b, g)
@@ -215,6 +253,60 @@ class Runtime:
 
         return jax.tree.map(place, target, caches)
 
+    def slot_caches(self, cfg, slots: int, max_len: int):
+        """Packed decode caches for a continuous-batching engine: the model's
+        canonical cache layout with ``slots`` as the batch dimension.  One
+        allocation serves every request the engine will ever run; requests
+        are written in and out of batch slots (:meth:`write_slot`) instead of
+        reallocating per wave."""
+        from repro.models import model as M  # local: avoid import cycle
+
+        return M.init_cache(cfg, slots, max_len)
+
+    def write_slot(self, cfg, caches, slot: int, part):
+        """Write one request's caches (batch=1, already grown to the packed
+        ``max_len`` via :meth:`grow_caches`) into batch slot ``slot``.
+
+        The batch axis of every leaf is found by layout probing
+        (:func:`cache_batch_axes`) — never by guessing which axis looks like
+        a batch — so slot packing works across KV / MLA-latent / SSM-state
+        cache trees uniformly."""
+        axes = cache_batch_axes(cfg)
+
+        def place(full, p, ax):
+            if p.shape[ax] != 1:
+                raise ValueError(
+                    f"slot write expects a batch-1 cache part, got {p.shape} "
+                    f"with batch axis {ax}"
+                )
+            start = [0] * full.ndim
+            start[ax] = slot
+            return jax.lax.dynamic_update_slice(full, p.astype(full.dtype), tuple(start))
+
+        return jax.tree.map(place, caches, part, axes)
+
+
+@functools.lru_cache(maxsize=None)
+def cache_batch_axes(cfg):
+    """Per-leaf batch-axis index of ``cfg``'s decode-cache tree.
+
+    Found by differencing abstract cache layouts at two batch sizes: the one
+    axis whose extent changes with the batch is the batch axis.  No
+    allocation (``jax.eval_shape``), no shape heuristics."""
+    from repro.models import model as M  # local: avoid import cycle
+
+    probe_len = 4
+    t2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, probe_len))
+    t3 = jax.eval_shape(lambda: M.init_cache(cfg, 3, probe_len))
+
+    def ax(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diffs) != 1:
+            raise ValueError(f"ambiguous batch axis: {a.shape} vs {b.shape}")
+        return diffs[0]
+
+    return jax.tree.map(ax, t2, t3)
+
 
 _DEFAULT = Runtime()
 _ACTIVE: contextvars.ContextVar[Runtime | None] = contextvars.ContextVar(
@@ -241,23 +333,12 @@ def default_runtime() -> Runtime:
     return _DEFAULT
 
 
-@functools.lru_cache(maxsize=None)
-def _shim_runtime(mode: str) -> Runtime:
-    """One Runtime per deprecated mode string, so its plan cache persists."""
-    return Runtime(backend=mode)
-
-
-def resolve(rt: Runtime | None = None, cfg=None) -> Runtime:
-    """Resolve the effective runtime: explicit > ambient > cfg shim > default."""
+def resolve(rt: Runtime | None = None) -> Runtime:
+    """Resolve the effective runtime: explicit > ambient > default."""
     if rt is not None:
         return rt
     ambient = _ACTIVE.get()
-    if ambient is not None:
-        return ambient
-    mode = getattr(cfg, "ffn_kernel_mode", "dense") if cfg is not None else "dense"
-    if mode != "dense":
-        return _shim_runtime(mode)
-    return _DEFAULT
+    return ambient if ambient is not None else _DEFAULT
 
 
 def active_mesh(mesh=None):

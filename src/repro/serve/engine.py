@@ -1,34 +1,63 @@
-"""Batched serving: prefill + decode loop with greedy/temperature sampling.
+"""Continuous-batching serve engine: scheduler + jitted ``lax.scan`` decode.
 
-``prefill_step`` and ``decode_step`` are the two programs the dry-run lowers
-for the inference shapes (``prefill_32k``; ``decode_32k``/``long_500k`` =
-one new token against a seq_len cache).
+The paper's amortized backside scheduler (§3.7) pays off when one
+``SparsityPlan`` is replayed across many decode steps and many concurrent
+requests.  The engine is built so that amortization actually meets traffic:
 
-Execution policy flows through one :class:`repro.runtime.Runtime`:
+* :class:`Scheduler` — host-side bookkeeping only: a FIFO of pending
+  requests and a slot table.  It admits requests into free batch slots and
+  evicts finished ones; it never touches device state.
 
-* the mesh comes from ``rt.mesh`` (or the ambient runtime) instead of being
-  hand-threaded through every call;
-* decode caches grow by *layout* — the model's canonical ``max_len`` cache
-  plus a ``dynamic_update_slice`` — not by guessing which axis looks like a
-  sequence axis;
-* under a sparse backend, the LM-head ``SparsityPlan`` is computed once at
-  prefill and replayed from ``rt.plan_cache`` on every decode step (the
-  paper's amortized backside scheduler, §3.7).
+* :class:`ServeEngine` — device state as packed per-slot arrays (last
+  token, position, active mask, remaining budget, per-request RNG key) plus
+  ONE packed decode-cache allocation (``Runtime.slot_caches``); a request's
+  prefill caches are written into its batch slot by layout
+  (``Runtime.write_slot``), so admission is a slot write, not a
+  reallocation.
 
-The old ``mesh=`` kwargs remain as explicit overrides.
+* the decode loop is a single **jitted, ``lax.scan``-based program**
+  (:func:`_decode_chunk`): ``chunk`` decode steps over all slots per call,
+  cache buffers donated so XLA updates them in place.  Its shape signature
+  is ``(slots, chunk, max_len)`` — admitting, finishing (EOS or budget) and
+  backfilling slots changes *data*, never shapes, so the program traces
+  once and is replayed for the engine's whole lifetime
+  (``ServeEngine.stats()["decode_traces"]``).
+
+Per-slot sequence positions ride as an int32 ``[slots]`` vector through
+``model.decode_step`` — each slot attends and writes its KV at its own
+position, which is what lets one scan serve requests of different lengths
+simultaneously.
+
+Under a sparse runtime the LM-head plan is computed once at the first
+prefill (a ``plan_cache`` miss), replayed from ``rt.plan_cache`` on every
+later prefill (identity-validated hits), and inside the jitted decode scan
+it is part of the traced program — XLA hoists the scan-invariant weight
+plan out of the loop, so it is computed once per chunk call, not per token
+(observable via ``rt.plan_cache.stats()["traced"]``).
+
+RNG: every request's sampling stream is ``fold_in(PRNGKey(seed), rid)``,
+split before first use and advanced per emitted token — so sampled output
+is deterministic per (seed, rid) and independent of which slot the request
+lands in or what else shares the batch.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import functools
+import itertools
+import time
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import runtime as rtm
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 
-__all__ = ["prefill_step", "decode_one", "generate"]
+__all__ = ["Request", "Scheduler", "ServeEngine", "prefill_step", "decode_one", "generate"]
 
 
 def prefill_step(params, cfg: ModelConfig, batch, mesh=None):
@@ -37,14 +66,336 @@ def prefill_step(params, cfg: ModelConfig, batch, mesh=None):
 
 
 def decode_one(params, cfg: ModelConfig, caches, step_batch, pos, mesh=None):
-    """One token for every sequence in the batch."""
+    """One token for every sequence in the batch (``pos`` scalar or [B])."""
     return M.decode_step(params, cfg, caches, step_batch, pos, mesh=rtm.active_mesh(mesh))
 
 
-def _sample(logits, key, temperature: float):
+def _sample_rows(logits, keys, temperature: float):
+    """Per-row sampling: logits [B, V] fp32, keys [B, 2] — one RNG stream
+    per request, so batch composition never perturbs a request's tokens."""
     if temperature == 0.0:
-        return jnp.argmax(logits, axis=-1)
-    return jax.random.categorical(key, logits / temperature, axis=-1)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sample = lambda l, k: jax.random.categorical(k, l / temperature)
+    return jax.vmap(sample)(logits, keys).astype(jnp.int32)
+
+
+#: number of times the decode-chunk program has been traced (not executed) —
+#: the compile-count probe: continuous batching must keep this at one per
+#: (slots, chunk, cache-shape) signature for the life of the process.
+DECODE_TRACES = 0
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "rt", "steps", "temperature", "eos_id", "pad_id"),
+    donate_argnums=(1, 2, 3, 4, 5, 6),
+)
+def _decode_chunk(params, caches, tok, pos, active, remaining, keys, *,
+                  cfg, rt, steps, temperature, eos_id, pad_id):
+    """``steps`` decode steps over the packed slot batch, as one program.
+
+    Carry: (tok [B], caches, pos [B], active [B] bool, remaining [B], keys
+    [B,2]).  Inactive slots still flow through the model (static shapes) but
+    their position is frozen, their emission masked to ``pad_id`` and their
+    RNG stream untouched; any KV rows they scribble at the frozen position
+    are overwritten by a later occupant's own write-before-read at that
+    position, and masked out of attention until then.
+
+    Emits ``(tokens [steps, B], emitted [steps, B])``; donated buffers make
+    the cache update in place.
+    """
+    global DECODE_TRACES
+    DECODE_TRACES += 1
+
+    def step(carry, _):
+        tok, caches, pos, active, remaining, keys = carry
+        with rtm.use(rt):
+            logits, caches = M.decode_step(
+                params, cfg, caches, {"tokens": tok[:, None]}, pos
+            )
+        splits = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+        nxt_keys, subs = splits[:, 0], splits[:, 1]
+        nxt = _sample_rows(logits[:, -1].astype(jnp.float32), subs, temperature)
+        nxt = jnp.where(active, nxt, jnp.int32(pad_id))
+        live = active.astype(jnp.int32)
+        pos = pos + live
+        remaining = remaining - live
+        done = remaining <= 0
+        if eos_id is not None:
+            done = done | (nxt == jnp.int32(eos_id))
+        emitted = active
+        keys = jnp.where(active[:, None], nxt_keys, keys)
+        active = active & ~done
+        return (nxt, caches, pos, active, remaining, keys), (nxt, emitted)
+
+    carry = (tok, caches, pos, active, remaining, keys)
+    (tok, caches, pos, active, remaining, keys), (toks, emitted) = jax.lax.scan(
+        step, carry, None, length=steps
+    )
+    return caches, tok, pos, active, remaining, keys, toks, emitted
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle record."""
+
+    rid: int
+    prompt: Any  # int32 [s]
+    max_new: int
+    arrival: float = 0.0  # traffic-replay timestamp (seconds, engine clock)
+    # engine-filled:
+    tokens: list = dataclasses.field(default_factory=list)
+    finished: bool = False
+    finish_reason: str | None = None  # "eos" | "length"
+    slot: int | None = None
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0  # first token (produced at admission, from prefill)
+    t_finish: float = 0.0
+
+
+class Scheduler:
+    """Slot table + FIFO admission.  Pure host-side bookkeeping.
+
+    ``admit()`` packs pending requests into free batch slots (EOS- or
+    budget-finished slots freed by ``evict`` are backfilled in FIFO order);
+    the engine turns each admission into a prefill + slot write.
+    """
+
+    def __init__(self, slots: int):
+        self.num_slots = slots
+        self.pending: collections.deque[Request] = collections.deque()
+        self.table: list[Request | None] = [None] * slots
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(r is not None for r in self.table)
+
+    def occupied(self) -> list[tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.table) if r is not None]
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.table) if r is None]
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Place pending requests into free slots; returns the placements."""
+        placed = []
+        for slot in self.free_slots():
+            if not self.pending:
+                break
+            req = self.pending.popleft()
+            req.slot = slot
+            self.table[slot] = req
+            placed.append((slot, req))
+        return placed
+
+    def evict(self, slot: int) -> Request:
+        req = self.table[slot]
+        assert req is not None, f"evicting empty slot {slot}"
+        self.table[slot] = None
+        req.slot = None
+        return req
+
+
+class ServeEngine:
+    """Continuous-batching generation over a fixed-capacity slot array.
+
+    One engine owns one packed cache allocation, one jitted decode program
+    per ``(slots, chunk)`` signature, and one plan cache (the runtime's).
+    Submit any number of requests; ``run()`` drains them with slots
+    backfilled as requests finish.
+
+    ``chunk`` is the number of decode steps fused into one jitted
+    ``lax.scan`` call — larger chunks amortize dispatch further but delay
+    admission of newly arrived requests by up to ``chunk`` steps.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
+                 max_len: int = 256, rt: "rtm.Runtime | None" = None,
+                 temperature: float = 0.0, eos_id: int | None = None,
+                 pad_id: int = 0, seed: int = 0, chunk: int = 8):
+        self.params = params
+        self.cfg = cfg
+        self.rt = rtm.resolve(rt)
+        self.max_len = int(max_len)
+        self.temperature = float(temperature)
+        self.eos_id = eos_id
+        self.pad_id = int(pad_id)
+        self.chunk = max(int(chunk), 1)
+        self.sched = Scheduler(slots)
+        self._rids = itertools.count()
+        self._base_key = jax.random.PRNGKey(seed)
+        self._requests: dict[int, Request] = {}
+        self._t0 = time.monotonic()
+        # packed per-slot device state
+        self.caches = self.rt.slot_caches(cfg, slots, self.max_len)
+        self.tok = jnp.zeros((slots,), jnp.int32)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.active = jnp.zeros((slots,), bool)
+        self.remaining = jnp.zeros((slots,), jnp.int32)
+        self.keys = jnp.zeros((slots, 2), jnp.uint32)
+        # counters
+        self.tokens_out = 0
+        self.chunks_run = 0
+        self.steps_run = 0
+
+    # -- submission --------------------------------------------------------
+    def submit(self, prompt, max_new: int = 32, arrival: float = 0.0) -> int:
+        """Queue one request; returns its rid.  ``prompt`` is int32 [s] with
+        ``s + max_new <= max_len``."""
+        prompt = jnp.asarray(prompt, jnp.int32)
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be rank-1, got {prompt.shape}")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if prompt.shape[0] + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) + max_new ({max_new}) exceeds "
+                f"engine max_len ({self.max_len})"
+            )
+        req = Request(rid=next(self._rids), prompt=prompt, max_new=int(max_new),
+                      arrival=float(arrival), t_submit=self._now())
+        self._requests[req.rid] = req
+        self.sched.submit(req)
+        return req.rid
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def now(self) -> float:
+        """Seconds on the engine clock (origin = engine construction).
+        Traffic replays should schedule arrivals on this clock so request
+        timestamps (``t_submit``/``t_first``/``t_finish``) are comparable."""
+        return self._now()
+
+    # -- admission: prefill into slots -------------------------------------
+    def _admit_group(self, placements: list[tuple[int, Request]]) -> None:
+        """Prefill one same-prompt-length group as a single batch and write
+        each request's caches into its slot (per-slot cache views)."""
+        g = len(placements)
+        s = placements[0][1].prompt.shape[0]
+        prompts = jnp.stack([r.prompt for _, r in placements])
+        with rtm.use(self.rt):
+            logits, caches = M.prefill(self.params, self.cfg, {"tokens": prompts})
+            part = self.rt.grow_caches(self.cfg, caches, g, self.max_len)
+            axes = rtm.cache_batch_axes(self.cfg)
+            for j, (slot, _) in enumerate(placements):
+                row = jax.tree.map(
+                    lambda x, ax: jax.lax.slice_in_dim(x, j, j + 1, axis=ax),
+                    part, axes,
+                )
+                self.caches = self.rt.write_slot(self.cfg, self.caches, slot, row)
+        # per-request RNG: fold the rid in, split BEFORE the first sample —
+        # the first token and every later token draw from distinct subkeys,
+        # and the stream depends only on (seed, rid), never on the batch
+        keys = jnp.stack(
+            [jax.random.fold_in(self._base_key, r.rid) for _, r in placements]
+        )
+        splits = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+        carried, subs = splits[:, 0], splits[:, 1]
+        firsts = np.asarray(_sample_rows(
+            logits[:, -1].astype(jnp.float32), subs, self.temperature
+        ))
+        now = self._now()
+        for j, (slot, req) in enumerate(placements):
+            first = int(firsts[j])
+            req.t_admit = req.t_first = now
+            req.tokens.append(first)
+            self.tokens_out += 1
+            is_eos = self.eos_id is not None and first == self.eos_id
+            done = req.max_new <= 1 or is_eos
+            self.tok = self.tok.at[slot].set(first)
+            self.pos = self.pos.at[slot].set(s)
+            self.remaining = self.remaining.at[slot].set(req.max_new - 1)
+            self.keys = self.keys.at[slot].set(carried[j])
+            self.active = self.active.at[slot].set(not done)
+            if done:
+                req.finish_reason = "eos" if is_eos else "length"
+
+    def _admit_all(self) -> None:
+        """Admit pending requests into free slots, batching same-length
+        prompts into one prefill each (prefill compiles once per length)."""
+        placements = self.sched.admit()
+        by_len: dict[int, list[tuple[int, Request]]] = {}
+        for slot, req in placements:
+            by_len.setdefault(req.prompt.shape[0], []).append((slot, req))
+        for group in by_len.values():
+            self._admit_group(group)
+
+    def _retire_finished(self) -> list[Request]:
+        """Evict every occupied slot whose device state went inactive."""
+        active = np.asarray(self.active)
+        out = []
+        for slot, req in self.sched.occupied():
+            if not active[slot]:
+                req.finished = True
+                req.t_finish = self._now()
+                if req.finish_reason is None:
+                    last = req.tokens[-1] if req.tokens else None
+                    req.finish_reason = (
+                        "eos" if self.eos_id is not None and last == self.eos_id
+                        else "length"
+                    )
+                out.append(self.sched.evict(slot))
+        return out
+
+    # -- the serving loop --------------------------------------------------
+    def step(self) -> list[Request]:
+        """Admit pending requests, run one decode chunk, retire finished.
+
+        Returns the requests that finished during this call."""
+        self._admit_all()
+        finished = self._retire_finished()  # requests done at admission
+        # backfill slots freed by admission-time finishes before decoding
+        self._admit_all()
+        finished += self._retire_finished()
+        if not bool(np.any(np.asarray(self.active))):
+            return finished
+        out = _decode_chunk(
+            self.params, self.caches, self.tok, self.pos, self.active,
+            self.remaining, self.keys,
+            cfg=self.cfg, rt=self.rt, steps=self.chunk,
+            temperature=self.temperature, eos_id=self.eos_id, pad_id=self.pad_id,
+        )
+        (self.caches, self.tok, self.pos, self.active, self.remaining,
+         self.keys, toks, emitted) = out
+        self.chunks_run += 1
+        self.steps_run += self.chunk
+        toks = np.asarray(toks)          # [steps, slots]
+        emitted = np.asarray(emitted)    # [steps, slots] bool
+        for slot, req in self.sched.occupied():
+            new = toks[emitted[:, slot], slot].tolist()
+            req.tokens.extend(new)
+            self.tokens_out += len(new)
+        finished += self._retire_finished()
+        return finished
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain every submitted request; returns {rid: emitted tokens}."""
+        while self.sched.has_work:
+            self.step()
+        return {rid: r.tokens for rid, r in self._requests.items()}
+
+    def stats(self) -> dict:
+        """Engine + plan-cache counters.
+
+        ``decode_traces`` (process-wide :data:`DECODE_TRACES`) is the
+        canonical compile-count probe.  The plan cache's ``traced`` counter
+        only moves when *this* runtime's cache was threaded through a trace:
+        two engines with equal-policy runtimes share one compiled decode
+        program (jit statics hash the policy, not the cache handle), so the
+        second engine's ``traced`` legitimately stays 0."""
+        return {
+            "tokens_out": self.tokens_out,
+            "chunks_run": self.chunks_run,
+            "steps_run": self.steps_run,
+            "slots": self.sched.num_slots,
+            "decode_traces": DECODE_TRACES,
+            "plan_cache": self.rt.plan_cache.stats(),
+        }
 
 
 def generate(
@@ -61,25 +412,21 @@ def generate(
 ):
     """End-to-end batched generation (LM archs).  prompt [B, S] int32.
 
-    ``rt`` selects the execution policy (backend, geometry, mesh, plan
-    cache); when omitted it resolves ambient -> config shim -> dense.
+    A thin convenience wrapper over :class:`ServeEngine`: every row becomes
+    a request, slots equal the batch, one jitted chunk covers the whole
+    decode.  ``rt`` selects the execution policy (backend, geometry, mesh,
+    plan cache); when omitted it resolves ambient -> dense.
     """
-    rt = rtm.resolve(rt, cfg)
+    rt = rtm.resolve(rt)
     if mesh is not None:
         rt = rt.replace(mesh=mesh)
+    prompt_tokens = jnp.asarray(prompt_tokens, jnp.int32)
     b, s = prompt_tokens.shape
     max_len = max_len or (s + max_new)
-    with rtm.use(rt):
-        logits, caches = prefill_step(params, cfg, {"tokens": prompt_tokens})
-        caches = rt.grow_caches(cfg, caches, b, max_len)
-        key = jax.random.PRNGKey(seed)
-        tok = _sample(logits[:, -1].astype(jnp.float32), key, temperature).astype(jnp.int32)
-        out = [tok]
-        for i in range(max_new - 1):
-            key, sub = jax.random.split(key)
-            logits, caches = decode_one(
-                params, cfg, caches, {"tokens": tok[:, None]}, jnp.int32(s + i)
-            )
-            tok = _sample(logits[:, -1].astype(jnp.float32), sub, temperature).astype(jnp.int32)
-            out.append(tok)
-    return jnp.stack(out, axis=1)  # [B, max_new]
+    eng = ServeEngine(
+        params, cfg, slots=b, max_len=max_len, rt=rt,
+        temperature=temperature, seed=seed, chunk=max(max_new - 1, 1),
+    )
+    rids = [eng.submit(prompt_tokens[i], max_new=max_new) for i in range(b)]
+    out = eng.run()
+    return jnp.asarray(np.stack([out[r] for r in rids]), jnp.int32)  # [B, max_new]

@@ -16,12 +16,10 @@ through the cycle-accurate ``core.perf_model`` simulator host-side (the
 paper's Fig. 14 view).
 
 Kernel-backend selection rides on the ambient ``repro.runtime.Runtime``
-(``with runtime.use(rt):``), which also supplies the mesh; passing ``mesh=``
-explicitly is deprecated (one-release shim).
+(``with runtime.use(rt):``), which also supplies the mesh; the PR-1 era
+explicit ``mesh=`` parameters completed their deprecation cycle and are gone.
 """
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -35,16 +33,6 @@ from repro.parallel.sharding import param_pspecs
 __all__ = ["make_train_step", "make_loss_fn", "init_train_state", "modeled_speedup"]
 
 
-def _warn_explicit_mesh(fn_name: str) -> None:
-    warnings.warn(
-        f"{fn_name}(mesh=...) is deprecated; install the mesh on the ambient "
-        "runtime instead: `with repro.runtime.use(Runtime(mesh=mesh)):` "
-        "(shim active this release)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
 def _make_loss(cfg: ModelConfig, mesh):
     def loss_fn(params, batch, probes=None, taps=None):
         return M.loss_fn(params, cfg, batch, mesh=mesh, probes=probes, taps=taps)
@@ -52,10 +40,9 @@ def _make_loss(cfg: ModelConfig, mesh):
     return loss_fn
 
 
-def make_loss_fn(cfg: ModelConfig, mesh=None):
-    if mesh is not None:
-        _warn_explicit_mesh("make_loss_fn")
-    return _make_loss(cfg, rtm.active_mesh(mesh))
+def make_loss_fn(cfg: ModelConfig):
+    """Loss closure over ``cfg``; the mesh comes from the ambient runtime."""
+    return _make_loss(cfg, rtm.active_mesh())
 
 
 def init_train_state(cfg: ModelConfig, params):
@@ -123,7 +110,6 @@ def modeled_speedup(metrics, cfg: ModelConfig, **kw) -> dict[str, float]:
 def make_train_step(
     cfg: ModelConfig,
     opt_cfg: OptConfig,
-    mesh=None,
     *,
     microbatches: int = 1,
     donate: bool = True,
@@ -132,14 +118,13 @@ def make_train_step(
     """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
     metrics)``.  ``batch`` is the global batch; with ``microbatches > 1`` it
     is split on the leading axis and gradients are accumulated in fp32.
+    The mesh comes from the ambient runtime (``with runtime.use(rt):``).
 
     ``sparsity_taps=True`` (dense/moe token-LM families) adds per-layer
     ``A_density`` / ``G_density`` vectors and a ``modeled_speedup`` scalar
     to the metrics; with microbatches the densities are averaged.
     """
-    if mesh is not None:
-        _warn_explicit_mesh("make_train_step")
-    mesh = rtm.active_mesh(mesh)
+    mesh = rtm.active_mesh()
     loss_fn = _make_loss(cfg, mesh)
     if sparsity_taps and (cfg.family not in ("dense", "moe") or cfg.frontend is not None):
         raise ValueError(

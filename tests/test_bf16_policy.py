@@ -1,0 +1,102 @@
+"""bfloat16 dtype policy through the planned kernels.
+
+The paper demonstrates TensorDash with bfloat16 operands (its Table 3 bf16
+configuration); the software analogue: planned matmuls run with bf16 inputs
+and fp32 accumulation on every backend, for the forward product and both
+registry-routed backward products (Eq. 2 ``W*G``, Eq. 3 ``A*G``), staying
+within bf16 round-off of the fp32 reference.  ``Runtime.compute_dtype``
+casts fp32 operands down on entry; the fp32-only ``accum_dtype`` guard is
+covered in ``test_runtime.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import Runtime
+
+BACKENDS = ["dense", "reference", "interpret"]
+TOL = 4e-2  # bf16 has ~8 mantissa bits; fp32 accumulation keeps error ~1 ulp
+
+
+def _sparse_operand(rng, m, k, bm, bk, density=0.5):
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    mask = rng.random((m // bm, k // bk)) < density
+    return (a.reshape(m // bm, bm, k // bk, bk) * mask[:, None, :, None]).reshape(m, k)
+
+
+def _operands(seed=0, m=32, k=64, n=32, bm=16, bk=32, bn=16):
+    rng = np.random.default_rng(seed)
+    a = _sparse_operand(rng, m, k, bm, bk)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bf16_forward_parity_vs_fp32(backend):
+    a32, b32 = _operands()
+    rt = Runtime(backend=backend, bm=16, bk=32, bn=16)
+    out16 = rt.matmul(a32.astype(jnp.bfloat16), b32.astype(jnp.bfloat16))
+    assert out16.dtype == jnp.bfloat16  # operand dtype preserved
+    ref = np.asarray(rt.matmul(a32, b32), np.float32)
+    np.testing.assert_allclose(
+        np.asarray(out16, np.float32), ref,
+        rtol=TOL, atol=TOL * np.abs(ref).max(),
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bf16_backward_products_parity_vs_fp32(backend):
+    """Both gradient products, planned and executed on ``backend`` with bf16
+    primals, match the fp32 dense-math cotangents within bf16 tolerance."""
+    a32, b32 = _operands(seed=1)
+    rt = Runtime(backend=backend, bm=16, bk=32, bn=16)
+
+    def loss(f, aa, bb):
+        return jnp.sum(f(aa, bb).astype(jnp.float32) ** 2)
+
+    da16, db16 = jax.grad(
+        lambda aa, bb: loss(rt.matmul, aa, bb), argnums=(0, 1)
+    )(a32.astype(jnp.bfloat16), b32.astype(jnp.bfloat16))
+    assert da16.dtype == jnp.bfloat16 and db16.dtype == jnp.bfloat16
+    da_ref, db_ref = jax.grad(
+        lambda aa, bb: loss(lambda x, y: x @ y, aa, bb), argnums=(0, 1)
+    )(a32, b32)
+    for got, ref in ((da16, da_ref), (db16, db_ref)):
+        ref = np.asarray(ref, np.float32)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), ref,
+            rtol=TOL, atol=TOL * np.abs(ref).max(),
+        )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_compute_dtype_policy_casts_on_entry(backend):
+    """``Runtime(compute_dtype=bf16)`` demotes fp32 operands at the matmul
+    boundary: bit-identical to casting by hand, on every backend."""
+    a32, b32 = _operands(seed=2)
+    rt16 = Runtime(backend=backend, bm=16, bk=32, bn=16, compute_dtype=jnp.bfloat16)
+    out = rt16.matmul(a32, b32)
+    assert out.dtype == jnp.bfloat16
+    rt = Runtime(backend=backend, bm=16, bk=32, bn=16)
+    manual = rt.matmul(a32.astype(jnp.bfloat16), b32.astype(jnp.bfloat16))
+    np.testing.assert_array_equal(
+        np.asarray(out, np.float32), np.asarray(manual, np.float32)
+    )
+
+
+def test_bf16_planned_parity_across_backends_bit_exact():
+    """One plan, bf16 operands: dense / reference / interpret execute the
+    identical schedule — bit-exact, exactly as in fp32."""
+    from repro.runtime import get_backend
+
+    a32, b32 = _operands(seed=3)
+    a16, b16 = a32.astype(jnp.bfloat16), b32.astype(jnp.bfloat16)
+    rt = Runtime(backend="interpret", bm=16, bk=32, bn=16)
+    plan = rt.plan(a16)
+    outs = [
+        np.asarray(get_backend(nm).matmul_planned(plan, a16, b16, bn=16), np.float32)
+        for nm in BACKENDS
+    ]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[1], outs[2])

@@ -63,11 +63,14 @@ def test_plan_all_zero_rows():
 
 
 def test_sparse_ffn_matches_ref():
+    from repro.runtime import Runtime
+
     rng = np.random.default_rng(9)
     x = rng.standard_normal((4, 8, 64)).astype(np.float32)
     w1 = rng.standard_normal((64, 128)).astype(np.float32)
     w2 = rng.standard_normal((128, 64)).astype(np.float32)
-    out = sparse_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2), mode="interpret", bm=16, bk=32, bn=16)
+    out = sparse_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2),
+                     runtime=Runtime(backend="interpret"), bm=16, bk=32, bn=16)
     ref = sparse_ffn_ref(jnp.asarray(x.reshape(32, 64)), jnp.asarray(w1), jnp.asarray(w2)).reshape(4, 8, 64)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
 

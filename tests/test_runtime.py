@@ -1,6 +1,5 @@
 """repro.runtime: backend registry parity, SparsityPlan cache semantics,
-deprecation shims, layout-driven cache growth, decode plan reuse."""
-import dataclasses
+geometry auto-clamping, layout-driven cache growth, decode plan reuse."""
 import warnings
 
 import jax
@@ -14,7 +13,6 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
 from repro.models import model as M
 from repro.models.common import init_params
-from repro.models.transformer import mlp_fwd
 from repro.runtime import (
     BackendCapabilityError,
     PlanCache,
@@ -88,12 +86,16 @@ def test_capability_checks():
         with pytest.raises(BackendCapabilityError, match="requires a TPU"):
             pallas.check_platform()
         assert not pallas.supports(32, 64, 32, bm=16, bk=32, bn=16)
+        assert not Runtime(backend="pallas").supports_matmul((32, 64), (64, 32))
     interp = get_backend("interpret")
+    # the raw backend API still rejects indivisible geometry ...
     with pytest.raises(BackendCapabilityError, match="not divisible"):
         interp.check_geometry(33, 64, 32, bm=16, bk=32, bn=16)
-    assert not Runtime(backend="interpret", bm=16, bk=32, bn=16).supports_matmul(
-        (33, 64), (64, 32)
-    )
+    # ... but the Runtime auto-clamps, so it supports any shape on-platform
+    rt = Runtime(backend="interpret", bm=16, bk=32, bn=16)
+    assert rt.supports_matmul((33, 64), (64, 32))
+    fitted = rt.fit((33, 64), (64, 32))
+    assert (fitted.bm, fitted.bk, fitted.bn) == (11, 32, 16)
 
 
 def test_register_custom_backend():
@@ -197,8 +199,10 @@ def test_accum_dtype_policy_is_enforced():
         rt.matmul(jnp.ones((4, 4)), jnp.ones((4, 4)))
 
 
-def test_geometry_fallback_warns():
-    """A sparse backend whose blocks don't divide the shapes must say so."""
+def test_geometry_autoclamps_no_dense_fallback():
+    """A sparse backend whose blocks don't divide the shapes auto-clamps its
+    geometry (bm 16 -> 3 for a 3-token microbatch) and stays on the planned
+    path — no RuntimeWarning, no silent dense XLA numbers."""
     cfg = _relu_cfg()
     rng = np.random.default_rng(9)
     params = {
@@ -210,61 +214,70 @@ def test_geometry_fallback_warns():
     from repro.models.transformer import mlp_fwd as _mlp
 
     with rtm.use(Runtime(backend="interpret", bm=16, bk=16, bn=16)):
-        with pytest.warns(RuntimeWarning, match="falling back to dense"):
-            _mlp(params, cfg, x)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            out = _mlp(params, cfg, x)
+    with rtm.use(Runtime(backend="dense")):
+        ref = _mlp(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_clamped_geometry_matches_dense_and_is_bit_exact_across_backends():
+    rng = np.random.default_rng(12)
+    a = jnp.asarray(rng.standard_normal((6, 40)).astype(np.float32))  # 6x40: odd
+    b = jnp.asarray(rng.standard_normal((40, 24)).astype(np.float32))
+    outs = {
+        name: np.asarray(Runtime(backend=name, bm=16, bk=32, bn=16).matmul(a, b))
+        for name in ("reference", "interpret")
+    }
+    np.testing.assert_array_equal(outs["reference"], outs["interpret"])
+    np.testing.assert_allclose(outs["interpret"], np.asarray(a @ b), rtol=2e-4, atol=2e-4)
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# runtime resolution (the PR-1 deprecation shims are gone)
 # ---------------------------------------------------------------------------
 
 
-def test_ops_mode_kwarg_shim_warns_and_matches():
+def test_explicit_runtime_beats_ambient_beats_default():
+    explicit = Runtime(backend="reference")
+    ambient = Runtime(backend="interpret")
+    assert rtm.resolve().backend == "dense"
+    with rtm.use(ambient):
+        assert rtm.resolve().backend == "interpret"
+        assert rtm.resolve(explicit).backend == "reference"
+    assert rtm.resolve().backend == "dense"
+
+
+def test_legacy_shims_are_gone():
+    """PR 2 scheduled the three one-release shims for removal here: the
+    ``mode=`` kernel kwarg, ``ModelConfig.ffn_kernel_mode``, and explicit
+    ``mesh=`` on the train-step factories must no longer exist."""
+    import dataclasses as dc
+
+    from repro.optim.adamw import OptConfig
+    from repro.train.step import make_loss_fn, make_train_step
+
     rng = np.random.default_rng(5)
     a = _sparse_operand(rng, 32, 64, 16, 32)
     b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
-    with pytest.warns(DeprecationWarning, match="mode= is deprecated"):
-        legacy = kops.matmul(a, b, mode="interpret", bm=16, bk=32, bn=16)
-    new = Runtime(backend="interpret", bm=16, bk=32, bn=16).matmul(a, b)
-    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
-
-
-def test_ffn_kernel_mode_shim():
-    base = reduce_config(get_config("deepseek-7b"))
-    with pytest.warns(DeprecationWarning, match="ffn_kernel_mode is deprecated"):
-        cfg = dataclasses.replace(base, ffn_kernel_mode="interpret", activation="relu")
-    # the shim resolves to a Runtime with the mapped backend
-    assert rtm.resolve(cfg=cfg).backend == "interpret"
-    assert cfg.runtime().backend == "interpret"
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        dense_cfg = dataclasses.replace(base, activation="relu")  # default: silent
-    # model code honours the shim: relu-gated FFN output matches dense
-    rng = np.random.default_rng(6)
-    params = {
-        "w_gate": jnp.asarray(rng.standard_normal((64, 128)).astype(np.float32)) * 0.05,
-        "w_up": jnp.asarray(rng.standard_normal((64, 128)).astype(np.float32)) * 0.05,
-        "w_down": jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32)) * 0.05,
-    }
-    x = jnp.asarray(rng.standard_normal((2, 16, 64)).astype(np.float32))
-    out_shim = mlp_fwd(params, cfg, x)
-    out_dense = mlp_fwd(params, dense_cfg, x)
-    np.testing.assert_allclose(
-        np.asarray(out_shim), np.asarray(out_dense), rtol=2e-4, atol=2e-4
+    with pytest.raises(TypeError):
+        kops.matmul(a, b, mode="interpret")
+    # runtime= replaces it, bit-identical to the Runtime method
+    legacy_free = kops.matmul(
+        a, b, runtime=Runtime(backend="interpret"), bm=16, bk=32, bn=16
     )
+    new = Runtime(backend="interpret", bm=16, bk=32, bn=16).matmul(a, b)
+    np.testing.assert_array_equal(np.asarray(legacy_free), np.asarray(new))
 
-
-def test_explicit_runtime_beats_ambient_beats_shim():
-    base = reduce_config(get_config("deepseek-7b"))
-    with pytest.warns(DeprecationWarning):
-        cfg = dataclasses.replace(base, ffn_kernel_mode="interpret")
-    explicit = Runtime(backend="reference")
-    ambient = Runtime(backend="dense")
-    assert rtm.resolve(cfg=cfg).backend == "interpret"
-    with rtm.use(ambient):
-        assert rtm.resolve(cfg=cfg).backend == "dense"
-        assert rtm.resolve(explicit, cfg).backend == "reference"
-    assert rtm.resolve().backend == "dense"
+    cfg = reduce_config(get_config("deepseek-7b"))
+    assert "ffn_kernel_mode" not in {f.name for f in dc.fields(cfg)}
+    with pytest.raises(TypeError):
+        dc.replace(cfg, ffn_kernel_mode="interpret")
+    with pytest.raises(TypeError):
+        make_train_step(cfg, OptConfig(), object())  # positional mesh
+    with pytest.raises(TypeError):
+        make_loss_fn(cfg, object())
 
 
 def test_ambient_mesh_resolution():
@@ -325,8 +338,10 @@ def _relu_cfg():
 
 
 def test_generate_decode_reuses_prefill_plan():
-    """Plan computed once at prefill; every decode step cache-hits (the
-    amortized backside scheduler) — and the tokens match the dense path."""
+    """The LM-head plan is computed once at the (eager) prefill; the jitted
+    decode scan carries it as part of the traced program — ``traced`` counts
+    the single trace, not one plan per token — and a second generation with
+    the same runtime cache-hits the prefill plan and retraces nothing."""
     cfg = _relu_cfg()
     params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
@@ -337,7 +352,15 @@ def test_generate_decode_reuses_prefill_plan():
     stats = rt.plan_cache.stats()
     assert stats["entries"] == 1, stats  # one lm_head plan, planned at prefill
     assert stats["misses"] == 1, stats
-    assert stats["hits"] == max_new - 1, stats  # every decode step reuses it
+    traced_after_first = stats["traced"]
+    assert traced_after_first >= 1, stats  # the decode scan planned in-trace
+    # second generation: prefill plan replayed (identity-validated hit), and
+    # the decode program is replayed from the jit cache — no new trace
+    generate(params, cfg, prompt, max_new=max_new, rt=rt)
+    stats2 = rt.plan_cache.stats()
+    assert stats2["hits"] >= 1, stats2
+    assert stats2["misses"] == 1, stats2
+    assert stats2["traced"] == traced_after_first, stats2
     out_dense = generate(params, cfg, prompt, max_new=max_new, rt=Runtime())
     np.testing.assert_array_equal(np.asarray(out_sparse), np.asarray(out_dense))
 
@@ -349,6 +372,8 @@ def test_generate_matches_dense_under_ambient_sparse_runtime():
     rt = Runtime(backend="reference", bm=2, bk=16, bn=16)
     with rtm.use(rt):
         out = generate(params, cfg, prompt, max_new=3)
+        generate(params, cfg, prompt, max_new=3)
     out_dense = generate(params, cfg, prompt, max_new=3)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(out_dense))
-    assert rt.plan_cache.hits >= 1
+    # the second ambient generation replays the first one's prefill plan
+    assert rt.plan_cache.misses == 1 and rt.plan_cache.hits >= 1
