@@ -8,11 +8,16 @@ Fails (exit 1) when any gated bench is missing, failed to run, or its
 baseline.  Improvements and un-gated benches are reported but never fail.
 CI machines are noisier than the machine that seeded the baseline, so gate
 only the benches whose absolute time is large enough to dominate jitter.
+
+When a ``BENCH_history.jsonl`` trajectory exists (``benchmarks/run.py
+--json`` appends one snapshot per run), the recent trend of every gated
+bench is printed alongside the gate verdict.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -20,8 +25,56 @@ def load(path: str) -> tuple[dict, dict]:
     with open(path) as f:
         payload = json.load(f)
     benches = payload.get("benches", payload)
-    meta = {k: payload.get(k) for k in ("platform", "python")}
+    meta = {k: payload.get(k) for k in ("platform", "python", "smoke")}
     return benches, meta
+
+
+def load_history(path: str) -> list[dict]:
+    """Parse the bench-trajectory JSONL (missing file -> empty trend)."""
+    if not path or not os.path.exists(path):
+        return []
+    snaps = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                snaps.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue  # a torn concurrent append must not kill the gate
+    return snaps
+
+
+def print_trend(snaps: list[dict], keys: list[str], meta: dict, smoke,
+                last: int = 8) -> None:
+    """Print the recent us trend per gated key, restricted to snapshots
+    from the *same environment and configuration* as the current run — a
+    cross-machine or smoke-vs-full delta is machine noise, not a trend."""
+    total = len(snaps)
+    snaps = [
+        s for s in snaps
+        if all(s.get(k) == meta.get(k) for k in ("platform", "python"))
+        and s.get("smoke") == smoke
+    ]
+    if not snaps:
+        if total:
+            print(f"\ntrend: no comparable snapshots ({total} from other "
+                  "environments/configs skipped)")
+        return
+    skipped = total - len(snaps)
+    note = f"; {skipped} from other environments skipped" if skipped else ""
+    print(f"\ntrend (last {min(last, len(snaps))} of {len(snaps)} comparable "
+          f"snapshots{note}):")
+    for key in keys:
+        vals = [s["benches"][key] for s in snaps if key in s.get("benches", {})]
+        if not vals:
+            print(f"  {key}: no history")
+            continue
+        tail = vals[-last:]
+        pts = " -> ".join(f"{v:.0f}" for v in tail)
+        delta = tail[-1] / tail[0] - 1.0 if tail[0] else 0.0
+        print(f"  {key}: {pts} us ({delta:+.0%} over window)")
 
 
 def main(argv=None) -> int:
@@ -32,6 +85,10 @@ def main(argv=None) -> int:
                     help="bench names to gate on")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="fail above this fractional slowdown (default 25%%)")
+    ap.add_argument("--history", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_history.jsonl"),
+        help="bench-trajectory JSONL to print trends from ('' disables)")
     args = ap.parse_args(argv)
     (base, base_meta), (cur, cur_meta) = load(args.baseline), load(args.current)
     if base_meta != cur_meta:
@@ -68,6 +125,8 @@ def main(argv=None) -> int:
     for key, c in sorted(cur.items()):
         if key not in args.keys and c.get("us_per_call") is not None:
             print(f"{key}: {float(c['us_per_call']):.0f}us (not gated)")
+    print_trend(load_history(args.history), args.keys, cur_meta,
+                cur_meta.get("smoke"))
     if failures:
         print("\nFAIL:", file=sys.stderr)
         for f in failures:

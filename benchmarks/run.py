@@ -143,10 +143,14 @@ def bench_spmm_kernel():
 def bench_plan_cache():
     """Hot-path win of reusable SparsityPlans: decode-style weight-side
     matmul with a cached plan vs re-planning every call (the old behaviour).
+    Also times the planning pass itself, cumsum-scatter (v2) vs the legacy
+    argsort compaction it replaced.
     """
+    import jax
     import jax.numpy as jnp
     import numpy as np
 
+    from repro.kernels.tensordash_spmm import _mask_to_plan, _mask_to_plan_argsort
     from repro.runtime import Runtime
 
     rng = np.random.default_rng(0)
@@ -165,11 +169,127 @@ def bench_plan_cache():
     replan = _best_of(
         lambda: rt.matmul(x, w, plan=rt.plan(w, side="B"), side="B").block_until_ready()
     )
+    # planning-pass A/B: the O(Kb) cumsum+scatter compaction vs legacy
+    # argsort, at an LM-head-scale block mask (where the asymptotics show;
+    # _mask_to_plan is already jitted in production, jit both for parity)
+    mask = jnp.asarray(rng.random((256, 512)) < 0.5)
+    f_new = _mask_to_plan  # jitted in-module
+    f_old = jax.jit(_mask_to_plan_argsort)
+    jax.block_until_ready(f_new(mask)), jax.block_until_ready(f_old(mask))
+    t_new = _best_of(lambda: jax.block_until_ready(f_new(mask)))
+    t_old = _best_of(lambda: jax.block_until_ready(f_old(mask)))
     s = rt.plan_cache.stats()
     return cached, (
         f"cached={cached:.0f}us replan={replan:.0f}us "
         f"speedup={replan / max(cached, 1e-9):.2f}x "
-        f"hits={s['hits']} misses={s['misses']}"
+        f"hits={s['hits']} misses={s['misses']} "
+        f"compact_cumsum={t_new:.0f}us argsort={t_old:.0f}us "
+        f"plan_delta={t_old - t_new:+.0f}us"
+    )
+
+
+def bench_spmm_compacted():
+    """The v2 grid-compaction win: kernel time scales with block density.
+
+    Same plan, same operands, interpret mode — v1 issues the full
+    ``Mb*Nb*Kb`` grid and merely gates skipped K steps; v2 bounds the K grid
+    by the per-call ``max(nnz)``, so at 50% (uniform per-row) block sparsity
+    it issues half the grid steps and finishes ~2x sooner.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.tensordash_spmm import (
+        plan_blocks,
+        planned_grid_steps,
+        tensordash_matmul_planned,
+    )
+
+    rng = np.random.default_rng(0)
+    m, k, n, bm, bk, bn = 128, 256, 64, 16, 32, 16
+    mb, kb, nb = m // bm, k // bk, n // bn
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    # uniform per-row 50% block sparsity: every block row keeps kb/2 blocks,
+    # so the compacted bound max(nnz) == kb/2 exactly
+    mask = np.zeros((mb, kb), bool)
+    for r in range(mb):
+        mask[r, rng.choice(kb, kb // 2, replace=False)] = True
+    a = jnp.asarray((a.reshape(mb, bm, kb, bk) * mask[:, None, :, None]).reshape(m, k))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    nnz, idx = plan_blocks(a, bm, bk)
+
+    kw = dict(bm=bm, bk=bk, bn=bn, interpret=True)
+    v2 = lambda: tensordash_matmul_planned(nnz, idx, a, b, **kw).block_until_ready()
+    v1 = lambda: tensordash_matmul_planned(
+        nnz, idx, a, b, compact_grid=False, **kw
+    ).block_until_ready()
+    v2(), v1()  # warm
+    t2, t1 = _best_of(v2, reps=30), _best_of(v1, reps=30)
+    s2 = planned_grid_steps(nnz, kb, mb, nb)
+    s1 = planned_grid_steps(nnz, kb, mb, nb, compact_grid=False)
+    err = float(jnp.abs(
+        tensordash_matmul_planned(nnz, idx, a, b, **kw) - a @ b
+    ).max())
+    return t2, (
+        f"grid_steps v1={s1} v2={s2} ({s1 / s2:.2f}x fewer) "
+        f"wall v1={t1:.0f}us v2={t2:.0f}us ({t1 / max(t2, 1e-9):.2f}x) "
+        f"density=50% max_err={err:.1e}"
+    )
+
+
+def bench_ffn_fused():
+    """The fused + emitted-plan FFN vs the v1 matmul->replan->matmul chain.
+
+    The baseline reproduces the pre-v2 ``sparse_ffn`` body faithfully:
+    dense first matmul, separate activation pass, then a per-call values
+    pass over the intermediate + the eager argsort compaction (the "2.1 ms
+    argsort pass" this PR's motivation cites) to plan the second matmul.
+    The fused path applies the activation in the first matmul's store step
+    and plans the second matmul from the kernel-emitted mask — metadata
+    already on hand.  Both second matmuls run the same planned executor.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.tensordash_spmm import _mask_to_plan_argsort
+    from repro.runtime import Runtime, get_backend
+
+    rng = np.random.default_rng(0)
+    t, d, dff, bm, bk, bn = 8, 256, 512, 8, 32, 32
+    # block-prune half of w1's column blocks: the ReLU'd intermediate is
+    # genuinely block-sparse, as after a trained ReLU FFN
+    x = jnp.asarray(0.1 * rng.standard_normal((t, d)).astype(np.float32))
+    w1 = 0.1 * rng.standard_normal((d, dff)).astype(np.float32)
+    colmask = rng.random(dff // bk) < 0.5
+    w1 = jnp.asarray(w1 * np.repeat(colmask, bk)[None, :])
+    w2 = jnp.asarray(0.1 * rng.standard_normal((dff, d)).astype(np.float32))
+    rt = Runtime(backend="reference", bm=bm, bk=bk, bn=bn)
+    be = get_backend("reference")
+
+    def fused():
+        return rt.sparse_ffn(x, w1, w2).block_until_ready()
+
+    def replan_chain():  # the pre-v2 sparse_ffn body, eager v1 planning
+        h = jnp.maximum(jnp.dot(x, w1, preferred_element_type=jnp.float32), 0.0)
+        h = h.astype(x.dtype)
+        mb2, kb2 = h.shape[0] // bm, h.shape[1] // bk
+        nonzero = jnp.any(h.reshape(mb2, bm, kb2, bk) != 0, axis=(1, 3))
+        nnz, idx = _mask_to_plan_argsort(nonzero)  # v1: eager, per call
+        return be.execute_planned(
+            nnz, idx, h, w2, bm=bm, bk=bk, bn=bn
+        ).block_until_ready()
+
+    fused(), replan_chain()  # warm
+    t_fused, t_chain = _best_of(fused, reps=30), _best_of(replan_chain, reps=30)
+    dense = jnp.dot(
+        jnp.maximum(jnp.dot(x, w1, preferred_element_type=jnp.float32), 0.0).astype(x.dtype),
+        w2, preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    err = float(jnp.abs(fused() - dense).max())
+    return t_fused, (
+        f"fused={t_fused:.0f}us replan_chain={t_chain:.0f}us "
+        f"speedup={t_chain / max(t_fused, 1e-9):.2f}x max_err={err:.1e} "
+        f"h_blocks_skipped={1.0 - float(np.mean(colmask)):.0%}"
     )
 
 
@@ -282,6 +402,8 @@ BENCHES = [
     ("table3_area_power_energy", bench_table3),
     ("scheduler_step_micro", bench_scheduler_step),
     ("tensordash_spmm_micro", bench_spmm_kernel),
+    ("spmm_compacted_micro", bench_spmm_compacted),
+    ("ffn_fused_micro", bench_ffn_fused),
     ("plan_cache_micro", bench_plan_cache),
     ("backward_planned_micro", bench_backward_planned),
     ("serve_decode_micro", bench_serve_decode),
@@ -291,10 +413,33 @@ BENCHES = [
 SMOKE = {
     "scheduler_step_micro",
     "tensordash_spmm_micro",
+    "spmm_compacted_micro",
+    "ffn_fused_micro",
     "plan_cache_micro",
     "backward_planned_micro",
     "serve_decode_micro",
 }
+
+
+HISTORY_DEFAULT = os.path.join(_ROOT, "BENCH_history.jsonl")
+
+
+def append_history(path: str, payload: dict) -> None:
+    """Append one compact snapshot line (us-per-call per bench) to the
+    bench-trajectory log — ``benchmarks/compare.py`` prints the trend."""
+    line = {
+        "timestamp": payload["timestamp"],
+        "platform": payload["platform"],
+        "python": payload["python"],
+        "smoke": payload["smoke"],
+        "benches": {
+            name: r["us_per_call"]
+            for name, r in payload["benches"].items()
+            if r.get("us_per_call") is not None
+        },
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
 
 
 def main(argv=None) -> None:
@@ -304,6 +449,9 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write results as JSON (CI artifact + "
                          "benchmarks/compare.py input)")
+    ap.add_argument("--history", metavar="PATH", default=HISTORY_DEFAULT,
+                    help="bench-trajectory JSONL appended to on every --json "
+                         "run (default: BENCH_history.jsonl; '' disables)")
     args = ap.parse_args(argv)
     results: dict[str, dict] = {}
     failed = succeeded = 0
@@ -333,6 +481,9 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
+        if args.history:
+            append_history(args.history, payload)
+            print(f"# appended snapshot to {args.history}", file=sys.stderr)
     if succeeded == 0 and failed:
         raise SystemExit(2)  # every bench failed: almost certainly a broken import
     if failed and args.smoke:

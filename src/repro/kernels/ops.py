@@ -9,21 +9,28 @@ from __future__ import annotations
 
 from repro import runtime as rtm
 from repro.kernels.tensordash_spmm import (
+    dense_plan,
     plan_blocks,
+    plan_from_mask,
     plan_to_mask,
     tensordash_matmul,
+    tensordash_matmul_fused,
     tensordash_matmul_planned,
     transpose_plan,
 )
 
 __all__ = [
     "matmul",
+    "matmul_fused",
     "matmul_grads",
     "sparse_ffn",
     "plan_blocks",
     "plan_to_mask",
+    "plan_from_mask",
+    "dense_plan",
     "transpose_plan",
     "tensordash_matmul",
+    "tensordash_matmul_fused",
     "tensordash_matmul_planned",
 ]
 
@@ -42,6 +49,21 @@ def matmul(a, b, *, runtime: "rtm.Runtime | None" = None,
            bm: int | None = None, bk: int | None = None, bn: int | None = None):
     """``a @ b`` on the resolved runtime's kernel backend."""
     return _resolve(runtime, bm, bk, bn).matmul(a, b)
+
+
+def matmul_fused(a, b, *, bias=None, residual=None, activation: str = "none",
+                 assume_dense: bool = False, runtime: "rtm.Runtime | None" = None,
+                 bm: int | None = None, bk: int | None = None, bn: int | None = None):
+    """Fused ``act(a @ b + bias) + residual`` returning ``(out, mask)``.
+
+    The epilogue runs in the kernel's store step and ``mask`` is the emitted
+    output block-nonzero map — the §3.7 backside-scheduler product a
+    downstream :func:`repro.runtime.plan.plan_from_emitted_mask` turns into
+    the consumer's plan without touching values."""
+    return _resolve(runtime, bm, bk, bn).matmul_fused(
+        a, b, bias=bias, residual=residual, activation=activation,
+        assume_dense=assume_dense,
+    )
 
 
 def matmul_grads(a, b, g, *, runtime: "rtm.Runtime | None" = None,

@@ -61,6 +61,66 @@ def tensordash_matmul_ref(nnz, idx, a, b, *, bm: int, bk: int, bn: int, out_dtyp
     return acc.reshape(m, n).astype(out_dtype)
 
 
+def _epilogue_ref(acc, bias, residual, activation: str):
+    """Same fp32 epilogue the fused kernel's store step applies (bias ->
+    activation -> residual), on the full accumulator."""
+    out = acc
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "squared_relu":
+        out = jnp.square(jnp.maximum(out, 0.0))
+    elif activation != "none":
+        raise ValueError(activation)
+    if residual is not None:
+        # barrier: pin the reference to true fp32 rounding (activation
+        # rounded, then add rounded).  The staged kernel may FMA-contract
+        # squared_relu's multiply into this add (see the kernel epilogue
+        # note), which is why that one combination is 1-ulp, not bitwise.
+        out = jax.lax.optimization_barrier(out)
+        out = out + residual.astype(jnp.float32)
+    return out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "activation", "out_dtype")
+)
+def tensordash_matmul_fused_ref(nnz, idx, a, b, bias=None, residual=None, *,
+                                bm: int, bk: int, bn: int,
+                                activation: str = "none", out_dtype=None):
+    """Plan-driven fused ``act(a @ b + bias) + residual`` in pure jnp, plus
+    the emitted ``int8 [Mb, Nb]`` output block-nonzero mask.
+
+    Executes exactly the schedule + epilogue the fused Pallas kernel
+    executes (fp32 accumulate in plan order, epilogue on the fp32 value,
+    mask computed pre-cast), so on CPU it is bit-identical to the kernel's
+    interpret mode — the parity oracle for ``execute_fused`` across the
+    backend registry, and the ``"dense"``/``"reference"`` executor.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, bm, bk, bn)
+    mb, kb, nb = m // bm, k // bk, n // bn
+    out_dtype = out_dtype or a.dtype
+    abl = a.reshape(mb, bm, kb, bk).transpose(0, 2, 1, 3)  # [Mb, Kb, bm, bk]
+    bbl = b.reshape(kb, bk, n)  # [Kb, bk, N]
+    rows = jnp.arange(mb)
+    acc = jnp.zeros((mb, bm, n), jnp.float32)
+    for j in range(kb):  # plan order, same accumulation sequence as the kernel
+        ki = idx[:, j]  # [Mb]
+        part = jnp.einsum(
+            "mik,mkn->min", abl[rows, ki], bbl[ki], preferred_element_type=jnp.float32
+        )
+        acc = acc + jnp.where((j < nnz)[:, None, None], part, 0.0)
+    out32 = _epilogue_ref(acc.reshape(m, n), bias, residual, activation)
+    mask = jnp.any(
+        out32.reshape(mb, bm, nb, bn) != 0, axis=(1, 3)
+    ).astype(jnp.int8)
+    return out32.astype(out_dtype), mask
+
+
 def matmul_grads_ref(a, b, g):
     """Dense-math cotangents of ``a @ b`` (fp32 accumulate, operand dtypes
     restored) — the oracle the sparsity-aware VJP must match: its planned

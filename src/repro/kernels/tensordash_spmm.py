@@ -1,4 +1,4 @@
-"""TensorDash on TPU: dynamic block-sparse matmul Pallas kernel.
+"""TensorDash on TPU: work-compacted dynamic block-sparse matmul kernels.
 
 This is the MXU-granularity adaptation of the paper's PE (DESIGN.md §2).
 The element-level mechanism — *compact the effectual work stream at run time
@@ -6,9 +6,9 @@ with a restricted-movement interconnect* — becomes, at TPU block granularity:
 
 1. ``plan_blocks`` (the "hardware scheduler"): from the sparse operand's
    runtime values, build per-M-block-row a *compacted* list of effectual
-   K-block indices plus a count.  This is pure data movement of metadata
-   (a [Mb, Kb] bool mask -> stable argsort), the analogue of the Z-vector and
-   priority encoders.
+   K-block indices plus a count.  Compaction is an O(Kb) ``cumsum`` +
+   scatter over the block-nonzero mask (the analogue of the Z-vector and
+   priority encoders) — pure data movement of metadata, no sort.
 
 2. The Pallas kernel (the "sparse interconnect"): the K grid dimension walks
    the compacted index list via scalar-prefetch index maps — the multiplexer
@@ -18,12 +18,37 @@ with a restricted-movement interconnect* — becomes, at TPU block granularity:
    but no lookaside across rows — block rows are independent, which is what
    keeps the interconnect "sparse" in the paper's sense).
 
-   Grid steps beyond the effectual count re-reference the last effectual
-   block: Pallas elides the HBM->VMEM copy for a revisited block and
-   ``pl.when`` gates the MXU work, the analogue of power-gating + advancing
-   work in time.
+3. **Grid compaction** (v2): the K grid dimension is bounded by the *dynamic*
+   per-call ``max(nnz)`` (clamped to >= 1 so all-zero operands still zero
+   the output) instead of the static ``Kb``.  Skipped blocks therefore cost
+   **zero grid steps** — elided MACs buy wall-clock, the paper's "advance
+   work in time" made real on TPU — and kernel time scales with block
+   density.  Rows whose ``nnz`` is below the bound still ``pl.when``-gate
+   their tail steps (their index maps re-reference the last effectual block,
+   so the revisit elides the HBM->VMEM copy: the residual gating is
+   power-gating, not time).  The v1 behaviour — full ``Kb`` grid, every
+   skipped step gated but still issued — is kept behind
+   ``compact_grid=False`` for A/B benchmarking (``spmm_compacted_micro``).
 
-The kernel computes ``C[M, N] = A[M, K] @ B[K, N]`` where ``A`` is the
+4. **Fused epilogues + emitted output plans** (§3.7 backside scheduler):
+   :func:`tensordash_matmul_fused` applies bias + activation (+ optional
+   residual add + out-dtype cast) inside the store step — no HBM round-trip
+   between an FFN's two matmuls — and emits the block-nonzero mask of its
+   *output* as a second, cheap ``int8 [Mb, Nb]`` result.  That mask is the
+   backside scheduler's product: the op that *wrote* the operand hands its
+   consumer the schedule, so the consumer's :func:`plan_from_mask` is a pure
+   metadata transform (no pass over the values) — replanning the FFN
+   intermediate, and the backward G-stream through a ReLU-family epilogue,
+   becomes free.
+
+Measured density→speedup (interpret-mode grid steps, 128x256x64 @ bm=16,
+bk=32, bn=16, uniform per-row nnz): density 1.0 → 1.0x, 0.5 → 2.0x,
+0.25 → 4.0x, 0.05 → 8.0x (wall-clock tracks step count; see
+``spmm_compacted_micro``).  Raggedness costs: the grid bound is the *max*
+row count, so rows below the max ride along gated — worst case (one dense
+row) degrades to v1, never below it.
+
+The kernels compute ``C[M, N] = A[M, K] @ B[K, N]`` where ``A`` is the
 dynamically-sparse operand stream (activations / gradients in the paper's
 three training convolutions).  Numerical fidelity is untouched: only
 multiplications by all-zero blocks are elided.
@@ -39,17 +64,24 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "plan_blocks",
     "plan_to_mask",
+    "plan_from_mask",
+    "dense_plan",
     "transpose_plan",
+    "planned_grid_steps",
     "tensordash_matmul_planned",
+    "tensordash_matmul_fused",
     "tensordash_matmul",
 ]
 
+#: epilogue activations the fused kernel understands (statically selected)
+FUSED_ACTIVATIONS = ("none", "relu", "squared_relu")
 
 
 def _compiler_params(**kw):
@@ -57,16 +89,47 @@ def _compiler_params(**kw):
     cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
     return cls(**kw)
 
-def _mask_to_plan(nonzero: jax.Array):
-    """Compact a block-nonzero mask ``[Mb, Kb]`` into ``(nnz, idx)``."""
+
+def _mask_to_plan_argsort(nonzero: jax.Array):
+    """Legacy argsort-based compaction (v1) — kept as the equality oracle
+    for :func:`_mask_to_plan` and the ``plan_cache_micro`` planning-time
+    A/B; new code should call :func:`_mask_to_plan`."""
     kb = nonzero.shape[1]
     nnz = jnp.sum(nonzero, axis=1).astype(jnp.int32)  # [Mb]
     # stable sort: effectual block ids first, in ascending k order
     order = jnp.argsort(~nonzero, axis=1, stable=True).astype(jnp.int32)
-    # tail: repeat the last effectual index so revisits hit a resident block
     pos = jnp.arange(kb, dtype=jnp.int32)[None, :]
     last = jnp.maximum(nnz - 1, 0)[:, None]
     idx = jnp.where(pos < jnp.maximum(nnz, 1)[:, None], order, jnp.take_along_axis(order, last, axis=1))
+    return nnz, idx
+
+
+@jax.jit
+def _mask_to_plan(nonzero: jax.Array):
+    """Compact a block-nonzero mask ``[Mb, Kb]`` into ``(nnz, idx)``.
+
+    O(Kb) per row: a ``cumsum`` assigns each effectual block its compacted
+    slot, a scatter writes it (ineffectual blocks are dropped out of
+    bounds), and the tail repeats the last effectual index so revisited
+    grid steps hit a resident block.  Bit-identical to the legacy argsort
+    path (ascending effectual order is what the cumsum produces naturally)
+    at ~O(Kb log Kb) less work — the delta is visible in
+    ``plan_cache_micro``'s derived string.  Jitted: plan compaction is one
+    dispatch, which is what keeps the emitted-mask path's metadata
+    replanning off the hot path's dispatch budget.
+    """
+    mb, kb = nonzero.shape
+    nonzero = nonzero != 0  # accept bool or int8 masks
+    nnz = jnp.sum(nonzero, axis=1).astype(jnp.int32)  # [Mb]
+    slot = jnp.cumsum(nonzero, axis=1, dtype=jnp.int32) - 1  # target slot per k
+    rows = jnp.arange(mb, dtype=jnp.int32)[:, None]
+    ks = jnp.broadcast_to(jnp.arange(kb, dtype=jnp.int32)[None, :], (mb, kb))
+    idx = jnp.zeros((mb, kb), jnp.int32).at[
+        rows, jnp.where(nonzero, slot, kb)
+    ].set(ks, mode="drop")
+    pos = jnp.arange(kb, dtype=jnp.int32)[None, :]
+    last = jnp.take_along_axis(idx, jnp.maximum(nnz - 1, 0)[:, None], axis=1)
+    idx = jnp.where(pos < jnp.maximum(nnz, 1)[:, None], idx, last)
     return nnz, idx
 
 
@@ -99,6 +162,49 @@ def plan_to_mask(nnz: jax.Array, idx: jax.Array) -> jax.Array:
     return mask.at[jnp.arange(mb)[:, None], idx].max(valid)
 
 
+@functools.partial(jax.jit, static_argnames=("coarsen",))
+def plan_from_mask(mask: jax.Array, *, coarsen: int = 1):
+    """Plan ``(nnz, idx)`` from an emitted block-nonzero mask — metadata only.
+
+    ``mask`` is the ``[Mb, Nb]`` int8/bool second output of
+    :func:`tensordash_matmul_fused` (the backside scheduler's product,
+    §3.7).  ``coarsen`` groups that many adjacent mask columns into one
+    consumer K block (the consumer may contract with ``bk`` a multiple of
+    the producer's ``bn``); a coarse block is effectual iff any member is.
+    No pass over the operand values is made.
+    """
+    mb, nb = mask.shape
+    if nb % coarsen:
+        raise ValueError(f"mask with {nb} columns cannot coarsen by {coarsen}")
+    nonzero = mask != 0
+    if coarsen > 1:
+        nonzero = jnp.any(nonzero.reshape(mb, nb // coarsen, coarsen), axis=2)
+    return _mask_to_plan(nonzero)
+
+
+@functools.lru_cache(maxsize=256)
+def dense_plan(mb: int, kb: int):
+    """The trivial all-effectual plan — pure metadata (no operand pass).
+
+    For a known-dense stream (e.g. the FFN input feeding the fused first
+    matmul) the full plan is just ``nnz = Kb`` and ``idx = arange``; the
+    compacted grid then degenerates to the dense grid, as it must.
+    Memoized per geometry: repeated decode/FFN calls at one shape pay zero
+    dispatches for it.  Returns *numpy* arrays: they are valid operands for
+    every executor, and caching them can never capture a tracer when the
+    first call happens inside a ``jit``/``scan`` trace.
+    """
+    nnz = np.full((mb,), kb, np.int32)
+    idx = np.ascontiguousarray(
+        np.broadcast_to(np.arange(kb, dtype=np.int32), (mb, kb))
+    )
+    # shared by every caller at this geometry: freeze so an in-place edit
+    # raises instead of silently corrupting the cached schedule
+    nnz.flags.writeable = False
+    idx.flags.writeable = False
+    return nnz, idx
+
+
 def transpose_plan(nnz: jax.Array, idx: jax.Array):
     """Plan of ``a.T`` (blocks ``bk x bm``) from the plan of ``a``.
 
@@ -111,7 +217,16 @@ def transpose_plan(nnz: jax.Array, idx: jax.Array):
     return _mask_to_plan(plan_to_mask(nnz, idx).T)
 
 
-def _kernel(nnz_ref, idx_ref, a_ref, b_ref, o_ref, acc_ref, *, n_kb: int):
+def planned_grid_steps(nnz, kb: int, mb: int, nb: int, *, compact_grid: bool = True) -> int:
+    """Grid steps the planned kernel will issue — the "time" the paper's
+    scheduler buys.  v1 (``compact_grid=False``) always issues the full
+    ``Mb * Nb * Kb``; v2 issues ``Mb * Nb * max(nnz, 1)``.  Concrete plans
+    only (benchmark/report helper)."""
+    kdim = kb if not compact_grid else max(int(jnp.max(nnz)), 1)
+    return mb * nb * kdim
+
+
+def _kernel(nnz_ref, idx_ref, a_ref, b_ref, o_ref, acc_ref):
     m_i = pl.program_id(0)
     k_i = pl.program_id(2)
 
@@ -126,39 +241,72 @@ def _kernel(nnz_ref, idx_ref, a_ref, b_ref, o_ref, acc_ref, *, n_kb: int):
             a_ref[...], b_ref[...], preferred_element_type=jnp.float32
         )
 
-    @pl.when(k_i == n_kb - 1)
+    # num_programs(2) is the (possibly dynamic) compacted K bound.
+    @pl.when(k_i == pl.num_programs(2) - 1)
     def _store():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("bm", "bk", "bn", "interpret", "out_dtype"),
-)
-def tensordash_matmul_planned(
-    nnz: jax.Array,
-    idx: jax.Array,
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    bm: int = 128,
-    bk: int = 512,
-    bn: int = 128,
-    interpret: bool = False,
-    out_dtype=None,
-):
-    """Block-sparse ``a @ b`` given a precomputed block plan (see
-    :func:`plan_blocks`).  Splitting planning from execution lets the plan be
-    produced by the *backside scheduler* (paper §3.7): e.g. the op that wrote
-    ``a`` emits the plan alongside, so consumers skip the replanning pass."""
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, bm, bk, bn)
-    mb, kb, nb = m // bm, k // bk, n // bn
-    out_dtype = out_dtype or a.dtype
+def _epilogue(acc, bias_blk, res_blk, activation: str):
+    """Shared fp32 epilogue: bias -> activation -> residual.  The emitted
+    mask is computed on this fp32 value (pre-cast), so a block the cast
+    rounds to zero still reads as effectual — conservative, never wrong."""
+    out = acc
+    if bias_blk is not None:
+        out = out + bias_blk
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "squared_relu":
+        out = jnp.square(jnp.maximum(out, 0.0))
+    elif activation != "none":
+        raise ValueError(f"unknown fused activation {activation!r}")
+    if res_blk is not None:
+        # Parity note: for "none"/"relu" the residual add follows an add/max
+        # and is bitwise identical across backends.  For "squared_relu" the
+        # square's multiply feeds this add and XLA:CPU may contract the pair
+        # into an FMA inside the staged kernel (optimization_barrier does
+        # not survive Pallas staging), so that one combination is within
+        # 1 ulp of the reference executor rather than bitwise.
+        out = out + res_blk
+    return out
 
-    grid = (mb, nb, kb)
+
+def _fused_kernel(nnz_ref, idx_ref, a_ref, b_ref, *rest,
+                  activation: str, has_bias: bool, has_residual: bool):
+    rest = list(rest)
+    bias_ref = rest.pop(0) if has_bias else None
+    res_ref = rest.pop(0) if has_residual else None
+    o_ref, mask_ref, acc_ref = rest
+    m_i = pl.program_id(0)
+    k_i = pl.program_id(2)
+
+    @pl.when(k_i == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k_i < nnz_ref[m_i])
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k_i == pl.num_programs(2) - 1)
+    def _store():
+        out = _epilogue(
+            acc_ref[...],
+            bias_ref[...] if has_bias else None,
+            res_ref[...].astype(jnp.float32) if has_residual else None,
+            activation,
+        )
+        mask_ref[0, 0] = jnp.any(out != 0).astype(jnp.int8)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _grid_and_maps(nnz, mb: int, nb: int, kb: int, compact_grid: bool):
+    """Common grid geometry: the K dimension is the dynamic compacted bound
+    ``max(nnz)`` (>= 1 so the zero accumulator still stores) or static Kb."""
+    kdim = jnp.maximum(jnp.max(nnz), 1) if compact_grid else kb
+    grid = (mb, nb, kdim)
 
     def a_map(m_i, n_i, k_i, nnz_ref, idx_ref):
         del n_i, nnz_ref
@@ -172,6 +320,43 @@ def tensordash_matmul_planned(
         del k_i, nnz_ref, idx_ref
         return (m_i, n_i)
 
+    return grid, a_map, b_map, o_map
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "interpret", "out_dtype", "compact_grid"),
+)
+def tensordash_matmul_planned(
+    nnz: jax.Array,
+    idx: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+    compact_grid: bool = True,
+):
+    """Block-sparse ``a @ b`` given a precomputed block plan (see
+    :func:`plan_blocks`).  Splitting planning from execution lets the plan be
+    produced by the *backside scheduler* (paper §3.7): e.g. the op that wrote
+    ``a`` emits the plan alongside, so consumers skip the replanning pass.
+
+    With ``compact_grid`` (default) the K grid dimension is the dynamic
+    per-call ``max(nnz)``: ineffectual blocks are skipped *in time* (zero
+    grid steps), not merely gated; ``compact_grid=False`` restores the v1
+    full-grid gated behaviour for A/B measurement."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, bm, bk, bn)
+    mb, kb, nb = m // bm, k // bk, n // bn
+    out_dtype = out_dtype or a.dtype
+
+    grid, a_map, b_map, o_map = _grid_and_maps(nnz, mb, nb, kb, compact_grid)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -183,7 +368,7 @@ def tensordash_matmul_planned(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, n_kb=kb),
+        _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         compiler_params=_compiler_params(
@@ -191,6 +376,96 @@ def tensordash_matmul_planned(
         ),
         interpret=interpret,
     )(nnz, idx, a, b)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "bm", "bk", "bn", "interpret", "out_dtype",
+                     "compact_grid"),
+)
+def tensordash_matmul_fused(
+    nnz: jax.Array,
+    idx: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    *,
+    activation: str = "none",
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+    compact_grid: bool = True,
+):
+    """Planned ``act(a @ b + bias) + residual`` with the epilogue fused into
+    the store step, plus the emitted output plan.
+
+    Returns ``(out [M, N], mask int8 [M/bm, N/bn])``.  The epilogue runs on
+    the fp32 accumulator — one store to HBM instead of a matmul round-trip
+    followed by elementwise passes — and the mask is the block-nonzero map
+    of the fp32 epilogue value: the §3.7 backside scheduler emitting the
+    *consumer's* schedule alongside the producer's data.  Feed it to
+    :func:`plan_from_mask` to plan the next matmul without touching values.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, bm, bk, bn)
+    if activation not in FUSED_ACTIVATIONS:
+        raise ValueError(f"activation {activation!r} not in {FUSED_ACTIVATIONS}")
+    mb, kb, nb = m // bm, k // bk, n // bn
+    out_dtype = out_dtype or a.dtype
+
+    grid, a_map, b_map, o_map = _grid_and_maps(nnz, mb, nb, kb, compact_grid)
+
+    def bias_map(m_i, n_i, k_i, nnz_ref, idx_ref):
+        del m_i, k_i, nnz_ref, idx_ref
+        return (0, n_i)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), a_map),
+        pl.BlockSpec((bk, bn), b_map),
+    ]
+    operands = [nnz, idx, a, b]
+    if bias is not None:
+        assert bias.shape == (n,), (bias.shape, n)
+        in_specs.append(pl.BlockSpec((1, bn), bias_map))
+        operands.append(bias.astype(jnp.float32).reshape(1, n))
+    if residual is not None:
+        assert residual.shape == (m, n), (residual.shape, (m, n))
+        in_specs.append(pl.BlockSpec((bm, bn), o_map))
+        operands.append(residual)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bm, bn), o_map),
+            pl.BlockSpec((1, 1), o_map),  # mask block (m_i, n_i), same map
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(
+        _fused_kernel,
+        activation=activation,
+        has_bias=bias is not None,
+        has_residual=residual is not None,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), out_dtype),
+            jax.ShapeDtypeStruct((mb, nb), jnp.int8),
+        ],
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
 
 
 def tensordash_matmul(
@@ -202,9 +477,11 @@ def tensordash_matmul(
     bn: int = 128,
     interpret: bool = False,
     out_dtype=None,
+    compact_grid: bool = True,
 ):
     """Dynamic block-sparse ``a @ b``: plan at run time, then execute."""
     nnz, idx = plan_blocks(a, bm, bk)
     return tensordash_matmul_planned(
-        nnz, idx, a, b, bm=bm, bk=bk, bn=bn, interpret=interpret, out_dtype=out_dtype
+        nnz, idx, a, b, bm=bm, bk=bk, bn=bn, interpret=interpret,
+        out_dtype=out_dtype, compact_grid=compact_grid,
     )

@@ -123,16 +123,25 @@ def mlp_fwd(params, cfg: ModelConfig, x, taps: dict | None = None, mesh=None, rt
     mesh = mesh if mesh is not None else rt.mesh
     if cfg.mlp_gated:
         if rt.wants_sparse and cfg.activation == "relu":
-            # TensorDash kernel path: second matmul skips zero blocks.  The
-            # runtime clamps its block geometry to the operand shapes, so
-            # odd token counts plan at a finer granularity instead of
-            # silently running dense.
+            # TensorDash fused + emitted-plan path (v2): the gate matmul
+            # applies ReLU in its store step and emits its output's
+            # block-nonzero mask.  Gating is a pointwise product, so a block
+            # the gate zeroed stays zero in h — the emitted mask is a valid
+            # (conservative) plan for the w_down matmul, which therefore
+            # never re-scans h's values; its compacted grid then skips those
+            # blocks in time.  The runtime clamps block geometry to the
+            # operand shapes, so odd token counts plan at a finer
+            # granularity instead of silently running dense.
             lead = x.shape[:-1]
-            h = act((x @ params["w_gate"])) * (x @ params["w_up"])
+            x2 = x.reshape(-1, x.shape[-1])
+            g, gmask = rt.matmul_fused(
+                x2, params["w_gate"], activation="relu", assume_dense=True
+            )
+            h2 = g * (x2 @ params["w_up"])
             if taps is not None:
-                taps["ffn_act"] = sps.measure(h)
-            h2 = h.reshape(-1, h.shape[-1])
-            return rt.matmul(h2, params["w_down"]).reshape(*lead, -1)
+                taps["ffn_act"] = sps.measure(h2.reshape(*lead, -1))
+            plan_h = rt.plan_for_fused_output(gmask, h2, params["w_down"])
+            return rt.matmul(h2, params["w_down"], plan=plan_h).reshape(*lead, -1)
         h = act(x @ params["w_gate"]) * (x @ params["w_up"])
     else:
         h = act(x @ params["w_up"])
@@ -154,6 +163,11 @@ def head_matmul(cfg: ModelConfig, h, lm_head):
     plan is part of the traced program instead (``PlanCache.traced``): XLA
     hoists it out of the scan, so it is still computed once per call, not
     per token.
+
+    Execution lands on the v2 compacted-grid kernel: the contraction grid
+    of the decode-path LM-head matmul is bounded by the head plan's
+    ``max(nnz)``, so a block-pruned head's skipped columns cost zero grid
+    steps per token — decode LM-head time scales with head density.
     """
     del cfg
     rt = rtm.resolve()

@@ -13,7 +13,13 @@ The single source of execution policy — the PR-1 era ``mode=`` kwargs,
 ``ModelConfig.ffn_kernel_mode`` string and hand-threaded ``mesh=`` state
 completed their deprecation cycle and have been removed.
 """
-from repro.runtime.autodiff import PlannedVJP, planned_matmul, planned_matmul_grads
+from repro.runtime.autodiff import (
+    FusedVJP,
+    PlannedVJP,
+    fused_planned_matmul,
+    planned_matmul,
+    planned_matmul_grads,
+)
 from repro.runtime.backends import (
     BackendCapabilityError,
     KernelBackend,
@@ -21,7 +27,13 @@ from repro.runtime.backends import (
     get_backend,
     register_backend,
 )
-from repro.runtime.plan import PlanCache, SparsityPlan, plan_operand
+from repro.runtime.plan import (
+    PlanCache,
+    SparsityPlan,
+    dense_operand_plan,
+    plan_from_emitted_mask,
+    plan_operand,
+)
 from repro.runtime.runtime import (
     Runtime,
     active_mesh,
@@ -48,7 +60,11 @@ __all__ = [
     "SparsityPlan",
     "PlanCache",
     "plan_operand",
+    "plan_from_emitted_mask",
+    "dense_operand_plan",
     "PlannedVJP",
+    "FusedVJP",
     "planned_matmul",
     "planned_matmul_grads",
+    "fused_planned_matmul",
 ]

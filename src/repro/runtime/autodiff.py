@@ -42,10 +42,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.tensordash_spmm import transpose_plan
+from repro.kernels.tensordash_spmm import plan_from_mask, transpose_plan
 from repro.runtime.plan import PlanCache, SparsityPlan
 
-__all__ = ["PlannedVJP", "planned_matmul", "planned_matmul_grads"]
+__all__ = [
+    "PlannedVJP",
+    "FusedVJP",
+    "planned_matmul",
+    "planned_matmul_grads",
+    "fused_planned_matmul",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,3 +172,137 @@ def _planned_bwd(ctx, res, g):
 
 
 planned_matmul.defvjp(_planned_fwd, _planned_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue matmul: act(a @ b + bias) + residual, with the emitted
+# output mask feeding the backward G-stream plan (paper §3.7).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedVJP(PlannedVJP):
+    """Static context for the fused planned matmul's differentiation rule.
+
+    Adds the epilogue: ``activation`` is applied to ``a @ b + bias`` in the
+    kernel's store step, then ``residual`` is added.  The backward rule's
+    **emitted-mask fast path** plans the output-gradient stream (Eq. 2's
+    sparse operand) from the mask the forward kernel emitted — a pure
+    metadata transform — whenever the epilogue guarantees the gradient
+    vanishes on masked-off blocks: ReLU-family activations with no residual
+    (``act'`` is zero wherever the output block is all zero).  Otherwise it
+    falls back to planning the cotangent by value, exactly like
+    :func:`planned_matmul`.
+
+    Differentiating a ReLU-family epilogue *with* a residual is refused
+    (``NotImplementedError``): ``act'`` would have to be reconstructed from
+    ``out - residual``, which rounding/cancellation can corrupt by whole
+    gradients, not ulps.  Residual fusion stays fully supported for
+    inference and for ``activation="none"`` (``act' = 1``, exact).
+
+    Precision note: without a residual, ``act'`` is reconstructed from the
+    *stored* output, so a low-precision ``out_dtype`` rounds it — exact for
+    fp32, ~2^-9 relative for bf16 (the same order as bf16 training noise
+    elsewhere).  Formats with a narrow exponent (fp16) additionally flush
+    tiny activations' gradients and should not be used as ``out_dtype``
+    when training through the fused path.
+    """
+
+    activation: str = "none"
+
+    @property
+    def mask_plans_cotangent(self) -> bool:
+        return self.activation in ("relu", "squared_relu")
+
+    def _act_grad(self, y32, g32):
+        """``g * act'(pre)`` computed from the post-activation value ``y``
+        (pre-residual, fp32): relu' = [y > 0]; (relu^2)' = 2*sqrt(y)."""
+        if self.activation == "none":
+            return g32
+        if self.activation == "relu":
+            return g32 * (y32 > 0)
+        if self.activation == "squared_relu":
+            return g32 * 2.0 * jnp.sqrt(y32)
+        raise ValueError(self.activation)
+
+
+def _mask_plan(ctx: FusedVJP, mask) -> SparsityPlan:
+    """Plan the cotangent stream from the forward's emitted output mask —
+    metadata only, no pass over gradient values.  The mask granularity
+    ``(bm, bn)`` is exactly the cotangent's blocking for Eq. 2."""
+    nnz_g, idx_g = plan_from_mask(mask)
+    mb, nb = mask.shape
+    return SparsityPlan(
+        nnz=nnz_g, idx=idx_g, bm=ctx.bm, bk=ctx.bn,
+        shape=(mb * ctx.bm, nb * ctx.bn), dtype=jnp.float32,
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_planned_matmul(ctx: FusedVJP, nnz, idx, a, b, bias, residual):
+    """Planned ``act(a @ b + bias) + residual`` on ``ctx.backend``, returning
+    ``(out, mask)`` where ``mask`` is the emitted int8 output block-nonzero
+    map.  ``bias``/``residual`` may be ``None`` (empty pytrees — their
+    cotangents are then ``None`` too)."""
+    from repro.runtime.backends import get_backend  # local: import cycle
+
+    return get_backend(ctx.backend).execute_fused(
+        nnz, idx, a, b, bias, residual,
+        bm=ctx.bm, bk=ctx.bk, bn=ctx.bn,
+        activation=ctx.activation, out_dtype=ctx.out_dtype,
+    )
+
+
+def _fused_fwd(ctx, nnz, idx, a, b, bias, residual):
+    out, mask = fused_planned_matmul(ctx, nnz, idx, a, b, bias, residual)
+    return (out, mask), (nnz, idx, a, b, bias, residual, out, mask)
+
+
+def _fused_bwd(ctx: FusedVJP, res, cots):
+    nnz, idx, a, b, bias, residual, out, mask = res
+    g, _ = cots  # the int8 mask output has a symbolic-zero cotangent
+    g32 = g.astype(jnp.float32)
+    # post-activation, pre-residual value (fp32): act' is a function of it
+    y32 = out.astype(jnp.float32)
+    if residual is not None and ctx.activation != "none":
+        # act'(y) would have to be reconstructed as out - residual, which
+        # loses the activation's sign/value to rounding and cancellation
+        # (|act| < ulp(res) reads as zero: the relu gate then silently
+        # drops whole gradients, not ulps).  Refuse rather than corrupt;
+        # "none" is exact (act' = 1, no reconstruction needed).
+        raise NotImplementedError(
+            f"differentiating a fused {ctx.activation!r} epilogue with a "
+            "residual is not supported: the backward cannot exactly recover "
+            "the pre-residual activation from the stored output — apply the "
+            "residual outside the kernel when training through it"
+        )
+    g_pre = ctx._act_grad(y32, g32)
+
+    # Eq. 2 (W*G): da = g_pre @ b.T, sparse stream = the gradient through the
+    # epilogue.  Fast path: a ReLU-family epilogue (no residual) zeroes the
+    # gradient wherever the emitted mask is zero, so the plan comes from the
+    # mask — metadata already on hand, no values pass over g_pre.
+    if ctx.mask_plans_cotangent and residual is None:
+        pg = _mask_plan(ctx, mask)
+        if ctx.cache is not None:
+            ctx.cache.traced += int(_is_traced(mask))
+    else:
+        pg = _cot_plan(ctx, g_pre)
+    da = ctx._execute(
+        ctx.bwd_backend, pg.nnz, pg.idx, g_pre, b.astype(jnp.float32).T,
+        bm=ctx.bm, bk=ctx.bn, bn=ctx.bk, out_dtype=a.dtype,
+    )
+    # Eq. 3 (A*G): db = a.T @ g_pre, planned by metadata transpose of the
+    # forward plan (shared with the unfused rule).
+    pt = _lhs_t_plan(ctx, nnz, idx, a)
+    db = ctx._execute(
+        ctx.bwd_backend, pt.nnz, pt.idx, a.astype(jnp.float32).T, g_pre,
+        bm=ctx.bk, bk=ctx.bm, bn=ctx.bn, out_dtype=b.dtype,
+    )
+    zero = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int plan metadata
+    dbias = None if bias is None else jnp.sum(g_pre, axis=0).astype(bias.dtype)
+    dres = None if residual is None else g.astype(residual.dtype)
+    return zero(nnz), zero(idx), da, db, dbias, dres
+
+
+fused_planned_matmul.defvjp(_fused_fwd, _fused_bwd)

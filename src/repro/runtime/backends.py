@@ -22,8 +22,16 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
-from repro.kernels.tensordash_spmm import tensordash_matmul_planned
-from repro.runtime.autodiff import PlannedVJP, planned_matmul
+from repro.kernels.tensordash_spmm import (
+    tensordash_matmul_fused,
+    tensordash_matmul_planned,
+)
+from repro.runtime.autodiff import (
+    FusedVJP,
+    PlannedVJP,
+    fused_planned_matmul,
+    planned_matmul,
+)
 from repro.runtime.plan import SparsityPlan, plan_operand
 
 __all__ = [
@@ -37,6 +45,15 @@ __all__ = [
 
 class BackendCapabilityError(ValueError):
     """The requested backend cannot run this op (platform / geometry)."""
+
+
+def _all_concrete(*xs) -> bool:
+    """True when no operand is a tracer: the call cannot be differentiated
+    through (``jax.grad``/``jit`` would have made them tracers), so the
+    ``custom_vjp`` wrapper — several hundred us of per-call machinery in
+    eager mode — can be skipped and the raw executor invoked directly.
+    The serving decode hot path is exactly this case."""
+    return not any(isinstance(x, jax.core.Tracer) for x in xs if x is not None)
 
 
 class KernelBackend:
@@ -86,6 +103,17 @@ class KernelBackend:
         """
         raise NotImplementedError
 
+    def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm: int, bk: int,
+                      bn: int, activation: str = "none", out_dtype=None):
+        """Primal-only planned fused ``act(a @ b + bias) + residual``.
+
+        Returns ``(out, mask)`` where ``mask`` is the emitted ``int8
+        [Mb, Nb]`` output block-nonzero map (the §3.7 backside scheduler's
+        product).  No differentiation rule — the raw executor
+        :func:`repro.runtime.autodiff.fused_planned_matmul` routes here.
+        """
+        raise NotImplementedError
+
     def matmul_planned(self, plan: SparsityPlan, a, b, *, bn: int, out_dtype=None,
                        plan_cache=None, plan_key=None, grad_backend=None):
         """Planned ``a @ b`` with the sparsity-aware VJP.
@@ -95,11 +123,39 @@ class KernelBackend:
         ``plan_cache``/``plan_key`` let eager backward executions reuse the
         transposed-weight plan across microbatches.
         """
+        if _all_concrete(plan.nnz, plan.idx, a, b):
+            return self.execute_planned(
+                plan.nnz, plan.idx, a, b, bm=plan.bm, bk=plan.bk, bn=bn,
+                out_dtype=out_dtype,
+            )
         ctx = PlannedVJP(
             backend=self.name, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
             grad_backend=grad_backend, cache=plan_cache, key=plan_key,
         )
         return planned_matmul(ctx, plan.nnz, plan.idx, a, b)
+
+    def matmul_fused(self, plan: SparsityPlan, a, b, *, bias=None, residual=None,
+                     activation: str = "none", bn: int, out_dtype=None,
+                     plan_cache=None, plan_key=None, grad_backend=None):
+        """Planned fused ``act(a @ b + bias) + residual`` with the
+        sparsity-aware VJP; returns ``(out, mask)``.
+
+        The backward rule's gradient products both take metadata-only plans:
+        Eq. 3 via the forward plan's transpose, Eq. 2 via the emitted mask
+        (ReLU-family epilogues — see :class:`FusedVJP`).
+        """
+        if _all_concrete(plan.nnz, plan.idx, a, b, bias, residual):
+            return self.execute_fused(
+                plan.nnz, plan.idx, a, b, bias, residual,
+                bm=plan.bm, bk=plan.bk, bn=bn, activation=activation,
+                out_dtype=out_dtype,
+            )
+        ctx = FusedVJP(
+            backend=self.name, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
+            grad_backend=grad_backend, cache=plan_cache, key=plan_key,
+            activation=activation,
+        )
+        return fused_planned_matmul(ctx, plan.nnz, plan.idx, a, b, bias, residual)
 
 
 class DenseBackend(KernelBackend):
@@ -125,6 +181,13 @@ class DenseBackend(KernelBackend):
             nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
         )
 
+    def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm, bk, bn,
+                      activation="none", out_dtype=None):
+        return ref.tensordash_matmul_fused_ref(
+            nnz, idx, a, b, bias, residual, bm=bm, bk=bk, bn=bn,
+            activation=activation, out_dtype=out_dtype,
+        )
+
 
 class ReferenceBackend(KernelBackend):
     """CPU block-sparse reference: plan + pure-jnp schedule execution."""
@@ -139,6 +202,13 @@ class ReferenceBackend(KernelBackend):
     def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None):
         return ref.tensordash_matmul_ref(
             nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
+        )
+
+    def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm, bk, bn,
+                      activation="none", out_dtype=None):
+        return ref.tensordash_matmul_fused_ref(
+            nnz, idx, a, b, bias, residual, bm=bm, bk=bk, bn=bn,
+            activation=activation, out_dtype=out_dtype,
         )
 
 
@@ -167,6 +237,14 @@ class PallasBackend(KernelBackend):
         return tensordash_matmul_planned(
             nnz, idx, a, b, bm=bm, bk=bk, bn=bn, interpret=self.interpret,
             out_dtype=out_dtype,
+        )
+
+    def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm, bk, bn,
+                      activation="none", out_dtype=None):
+        self.check_platform()
+        return tensordash_matmul_fused(
+            nnz, idx, a, b, bias, residual, activation=activation,
+            bm=bm, bk=bk, bn=bn, interpret=self.interpret, out_dtype=out_dtype,
         )
 
 

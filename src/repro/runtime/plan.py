@@ -25,7 +25,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SparsityPlan", "PlanCache", "plan_operand"]
+__all__ = [
+    "SparsityPlan",
+    "PlanCache",
+    "plan_operand",
+    "plan_from_emitted_mask",
+    "dense_operand_plan",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,14 +103,59 @@ def plan_operand(a, bm: int, bk: int, *, side: str = "A") -> SparsityPlan:
     )
 
 
+def plan_from_emitted_mask(mask, shape, dtype, *, bm: int, mask_bn: int,
+                           bk: int | None = None) -> SparsityPlan:
+    """Build the consumer's :class:`SparsityPlan` from a producer-emitted
+    output mask — pure metadata, no pass over the operand values.
+
+    ``mask`` is the ``int8 [M/bm, N/mask_bn]`` second output of the fused
+    kernel for an operand of ``shape = (M, N)``.  When the consumer's
+    contraction block ``bk`` is a multiple of the producer's ``mask_bn``,
+    adjacent mask columns are coarsened (a coarse block is effectual iff any
+    member is); otherwise the plan keeps the emitted ``mask_bn`` granularity
+    — finer blocks, identical numerics.
+    """
+    from repro.kernels.tensordash_spmm import plan_from_mask  # local: keep import light
+
+    coarsen = 1
+    plan_bk = mask_bn
+    if bk is not None and bk != mask_bn:
+        if bk % mask_bn == 0 and shape[1] % bk == 0:
+            coarsen, plan_bk = bk // mask_bn, bk
+    nnz, idx = plan_from_mask(mask, coarsen=coarsen)
+    return SparsityPlan(
+        nnz=nnz, idx=idx, bm=bm, bk=plan_bk, shape=tuple(shape), dtype=dtype
+    )
+
+
+def dense_operand_plan(shape, dtype, *, bm: int, bk: int, side: str = "A") -> SparsityPlan:
+    """The trivial all-effectual plan for a known-dense operand — metadata
+    only (``nnz = Kb``, ``idx = arange``), skipping the values pass a
+    :func:`plan_operand` call would make."""
+    from repro.kernels.tensordash_spmm import dense_plan  # local: keep import light
+
+    m, k = shape
+    if m % bm or k % bk:
+        raise ValueError(f"operand {shape} not divisible by block ({bm}, {bk})")
+    nnz, idx = dense_plan(m // bm, k // bk)
+    return SparsityPlan(
+        nnz=nnz, idx=idx, bm=bm, bk=bk, shape=(m, k), dtype=dtype, side=side
+    )
+
+
 class PlanCache:
-    """Keyed SparsityPlan cache with identity-validated hits.
+    """Keyed SparsityPlan cache with identity-validated hits, LRU eviction.
 
     Entries are keyed by ``(key, side, shape, dtype, bm, bk)`` and store the
     source operand alongside the plan.  A lookup only hits when the stored
     source *is* the queried array (same buffer), which makes reuse exact by
     construction — a rebound key (new weights under the same name) is a miss
     and transparently replaces the stale entry.
+
+    Eviction is LRU: a hit moves its entry to the back of the queue, so
+    sustained serving with more live weights than ``capacity`` evicts the
+    coldest plan, never a just-hit hot one (the FIFO predecessor thrashed
+    exactly those).
     """
 
     def __init__(self, capacity: int | None = None):
@@ -124,23 +175,25 @@ class PlanCache:
         return (key, side, tuple(a.shape), str(a.dtype), bm, bk)
 
     def lookup(self, key, a, bm: int, bk: int, side: str = "A") -> SparsityPlan | None:
-        entry = self._entries.get(self._key(key, a, bm, bk, side))
+        k = self._key(key, a, bm, bk, side)
+        entry = self._entries.get(k)
         if entry is not None and entry[0] is a:
             self.hits += 1
+            # LRU: move-to-end on hit (dicts iterate in insertion order, so
+            # eviction pops the front = least recently used)
+            self._entries[k] = self._entries.pop(k)
             return entry[1]
         return None
 
     def store(self, key, a, plan: SparsityPlan) -> SparsityPlan:
         self.misses += 1
         k = self._key(key, a, plan.bm, plan.bk, plan.side)
-        # rebinding an existing key replaces in place — never evicts a
-        # live unrelated entry
-        if (
-            self.capacity is not None
-            and k not in self._entries
-            and len(self._entries) >= self.capacity
-        ):
-            self._entries.pop(next(iter(self._entries)))  # FIFO eviction
+        # rebinding an existing key replaces (and refreshes recency) — never
+        # evicts a live unrelated entry
+        if k in self._entries:
+            self._entries.pop(k)
+        elif self.capacity is not None and len(self._entries) >= self.capacity:
+            self._entries.pop(next(iter(self._entries)))  # LRU eviction (front)
         self._entries[k] = (a, plan)
         return plan
 

@@ -37,7 +37,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.runtime.backends import KernelBackend, get_backend
-from repro.runtime.plan import PlanCache, SparsityPlan, plan_operand
+from repro.runtime.plan import (
+    PlanCache,
+    SparsityPlan,
+    dense_operand_plan,
+    plan_from_emitted_mask,
+    plan_operand,
+)
 
 __all__ = [
     "Runtime",
@@ -142,6 +148,19 @@ class Runtime:
             return False
 
     # -- execution ---------------------------------------------------------
+    def _dtype_prologue(self, a, b):
+        """Shared matmul/matmul_fused entry checks: enforce the fp32
+        accumulator policy and apply the compute-dtype cast."""
+        if jnp.dtype(self.accum_dtype) != jnp.dtype(jnp.float32):
+            raise NotImplementedError(
+                f"accum_dtype={self.accum_dtype}: all registered backends "
+                "accumulate in float32"
+            )
+        if self.compute_dtype is not None:
+            a = a.astype(self.compute_dtype)
+            b = b.astype(self.compute_dtype)
+        return a, b
+
     def matmul(self, a, b, *, plan: SparsityPlan | None = None, plan_key=None, side: str = "A"):
         """``a @ b`` on this runtime's backend.
 
@@ -158,14 +177,7 @@ class Runtime:
         plan cache rides along so eager backward passes reuse the static
         transposed-weight plan across microbatches.
         """
-        if jnp.dtype(self.accum_dtype) != jnp.dtype(jnp.float32):
-            raise NotImplementedError(
-                f"accum_dtype={self.accum_dtype}: all registered backends "
-                "accumulate in float32"
-            )
-        if self.compute_dtype is not None:
-            a = a.astype(self.compute_dtype)
-            b = b.astype(self.compute_dtype)
+        a, b = self._dtype_prologue(a, b)
         kernel = self.kernel
         if not kernel.sparse and plan is None and plan_key is None:
             return kernel.matmul(a, b, bm=self.bm, bk=self.bk, bn=self.bn)
@@ -194,6 +206,71 @@ class Runtime:
             plan_cache=self.plan_cache, plan_key=("A", plan_key),
         )
 
+    def matmul_fused(self, a, b, *, bias=None, residual=None,
+                     activation: str = "none", plan: SparsityPlan | None = None,
+                     plan_key=None, assume_dense: bool = False):
+        """Fused ``act(a @ b + bias) + residual`` on this runtime's backend,
+        returning ``(out, mask)``.
+
+        The epilogue runs inside the kernel's store step (no HBM round-trip
+        between matmul and activation) and ``mask`` is the emitted ``int8``
+        output block-nonzero map — feed it to
+        :func:`repro.runtime.plan.plan_from_emitted_mask` to plan the
+        consumer matmul from metadata (paper §3.7's backside scheduler).
+        ``assume_dense=True`` uses the trivial all-effectual plan for ``a``
+        (metadata only — for streams known dense, e.g. an FFN input) instead
+        of planning its values.  Differentiable: both backward products take
+        metadata-only plans (emitted mask / forward-plan transpose) for
+        ReLU-family activations.
+        """
+        a, b = self._dtype_prologue(a, b)
+        kernel = self.kernel
+        rt = self if plan is not None else self.fit(a.shape, b.shape)
+        if not kernel.sparse and plan is None:
+            # dense shortcut (mirrors matmul's): one XLA dot + the shared
+            # fp32 epilogue; the mask is a blockwise any at the geometry
+            # the planned path would emit
+            from repro.kernels.ref import _epilogue_ref  # local: keep import light
+
+            out32 = _epilogue_ref(
+                jnp.dot(a, b, preferred_element_type=jnp.float32),
+                bias, residual, activation,
+            )
+            bm_f, bn_f = rt.bm, _fit_block(rt.bn, b.shape[1])
+            m, n = out32.shape
+            mask = jnp.any(
+                out32.reshape(m // bm_f, bm_f, n // bn_f, bn_f) != 0, axis=(1, 3)
+            ).astype(jnp.int8)
+            return out32.astype(a.dtype), mask
+        kernel.check_platform()
+        if plan is None:
+            if assume_dense:
+                plan = dense_operand_plan(a.shape, a.dtype, bm=rt.bm, bk=rt.bk)
+            else:
+                plan = rt.plan(a, key=plan_key)
+        return kernel.matmul_fused(
+            plan, a, b, bias=bias, residual=residual, activation=activation,
+            bn=_fit_block(rt.bn, b.shape[1]), out_dtype=a.dtype,
+            plan_cache=self.plan_cache, plan_key=("A", plan_key),
+        )
+
+    def plan_for_fused_output(self, mask, h, w) -> SparsityPlan:
+        """Consumer plan for a fused matmul's output ``h`` (about to be the
+        sparse stream of ``h @ w``), built from the emitted ``mask`` alone.
+
+        Re-derives the producer's block geometry from the shapes
+        (``bm = M / Mb``, ``mask_bn = N / Nb``) and coarsens to this
+        runtime's fitted contraction block when divisible — the single
+        place that geometry recovery lives, shared by every emitted-mask
+        consumer (``sparse_ffn``, the transformer FFN).
+        """
+        return plan_from_emitted_mask(
+            mask, h.shape, h.dtype,
+            bm=h.shape[0] // mask.shape[0],
+            mask_bn=h.shape[1] // mask.shape[1],
+            bk=self.fit(h.shape, w.shape).bk,
+        )
+
     def matmul_grads(self, a, b, g, *, plan: SparsityPlan | None = None, plan_key=None):
         """Eager sparsity-aware cotangents ``(da, db)`` of ``a @ b``.
 
@@ -217,18 +294,32 @@ class Runtime:
 
     def sparse_ffn(self, x, w1, w2, *, activation: str = "relu"):
         """FFN whose second matmul exploits the activation sparsity the
-        first one produced (the framework's main kernel consumer)."""
+        first one produced (the framework's main kernel consumer).
+
+        Sparse backends run the fused + emitted-plan path: the first matmul
+        applies the activation inside its store step (no HBM round-trip)
+        and emits the intermediate's block-nonzero mask, from which the
+        second matmul's :class:`SparsityPlan` is built as a pure metadata
+        transform — the per-call replanning pass over the intermediate's
+        values (the old ``argsort`` bottleneck in ``plan_cache_micro``) is
+        gone.  Dense backends keep the plain two-dot formulation.
+        """
+        if activation not in ("relu", "squared_relu"):
+            raise ValueError(activation)
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
-        h = jnp.dot(x2, w1, preferred_element_type=jnp.float32)
-        if activation == "relu":
+        if not self.wants_sparse:
+            h = jnp.dot(x2, w1, preferred_element_type=jnp.float32)
             h = jnp.maximum(h, 0.0)
-        elif activation == "squared_relu":
-            h = jnp.square(jnp.maximum(h, 0.0))
-        else:
-            raise ValueError(activation)
-        h = h.astype(x.dtype)
-        out = self.matmul(h, w2)
+            if activation == "squared_relu":
+                h = jnp.square(h)
+            h = h.astype(x.dtype)
+            out = self.matmul(h, w2)
+            return out.reshape(*lead, w2.shape[-1])
+        h, mask = self.matmul_fused(
+            x2, w1, activation=activation, assume_dense=True
+        )
+        out = self.matmul(h, w2, plan=self.plan_for_fused_output(mask, h, w2))
         return out.reshape(*lead, w2.shape[-1])
 
     # -- serving cache layout ---------------------------------------------

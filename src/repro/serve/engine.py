@@ -33,7 +33,12 @@ prefill (a ``plan_cache`` miss), replayed from ``rt.plan_cache`` on every
 later prefill (identity-validated hits), and inside the jitted decode scan
 it is part of the traced program — XLA hoists the scan-invariant weight
 plan out of the loop, so it is computed once per chunk call, not per token
-(observable via ``rt.plan_cache.stats()["traced"]``).
+(observable via ``rt.plan_cache.stats()["traced"]``).  Execution goes
+through the v2 compacted-grid kernel: each decode step's LM-head matmul
+issues ``max(nnz)`` contraction grid steps instead of the full ``Kb``, so a
+block-pruned head's elided columns buy wall-clock on every token of every
+slot, not just power.  The engine's plan cache is LRU — sustained serving
+with more live weights than capacity keeps the hottest plans resident.
 
 RNG: every request's sampling stream is ``fold_in(PRNGKey(seed), rid)``,
 split before first use and advanced per emitted token — so sampled output

@@ -158,19 +158,40 @@ def test_plan_cache_never_caches_tracers():
     assert len(rt.plan_cache) == 0 and rt.plan_cache.misses == 0
 
 
-def test_plan_cache_fifo_capacity():
+def test_plan_cache_lru_capacity():
     cache = PlanCache(capacity=2)
     rt = Runtime(backend="dense", bm=16, bk=32, bn=16, plan_cache=cache)
     rng = np.random.default_rng(4)
     arrays = [_sparse_operand(rng, 32, 64, 16, 32) for _ in range(3)]
     for i, a in enumerate(arrays):
         rt.plan(a, key=f"w{i}")
-    assert len(cache) == 2  # oldest evicted
+    assert len(cache) == 2  # oldest (least recently used) evicted
     # rebinding an existing key at capacity replaces in place: the other
     # live entry must survive
     rebound = rt.plan(_sparse_operand(rng, 32, 64, 16, 32), key="w2")
     assert len(cache) == 2
     assert rt.plan(arrays[1], key="w1") is not None and cache.hits >= 1
+
+
+def test_plan_cache_lru_hit_survives_eviction():
+    """Eviction is LRU, not FIFO: a just-hit entry must outlive an older
+    *insertion* when a new entry forces eviction — serving with more live
+    weights than capacity keeps the hottest plans resident."""
+    cache = PlanCache(capacity=2)
+    rt = Runtime(backend="dense", bm=16, bk=32, bn=16, plan_cache=cache)
+    rng = np.random.default_rng(7)
+    a0 = _sparse_operand(rng, 32, 64, 16, 32)
+    a1 = _sparse_operand(rng, 32, 64, 16, 32)
+    a2 = _sparse_operand(rng, 32, 64, 16, 32)
+    p0 = rt.plan(a0, key="w0")
+    rt.plan(a1, key="w1")
+    assert rt.plan(a0, key="w0") is p0  # hit: w0 becomes most recent
+    rt.plan(a2, key="w2")  # at capacity: must evict w1 (LRU), NOT w0
+    misses = cache.misses
+    assert rt.plan(a0, key="w0") is p0  # survived eviction (no new miss)
+    assert cache.misses == misses
+    assert rt.plan(a1, key="w1").nnz is not None  # w1 was the one evicted
+    assert cache.misses == misses + 1
 
 
 def test_sparse_backend_is_differentiable():

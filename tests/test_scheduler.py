@@ -8,7 +8,12 @@ try:
 except ImportError:  # bare container: fixed-seed fallback sweep
     from _hypothesis_fallback import given, settings, st
 
-from repro.core.scheduler import connectivity, levels, make_schedule_step
+from repro.core.scheduler import (
+    _make_schedule_step_reference,
+    connectivity,
+    levels,
+    make_schedule_step,
+)
 from repro.core.pe import simulate_stream, simulate_tile
 
 
@@ -61,6 +66,34 @@ def test_schedule_step_valid(seed, density):
     assert (consumed == chosen).all()
     assert not out_np[0].any(), "row 0 must fully drain (AS >= 1)"
     assert 1 <= int(res.advance) <= 3
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**48 - 1), st.floats(0.0, 1.0))
+def test_vectorized_schedule_bit_identical_to_reference(seed, density):
+    """The scalarized (gather/scatter-free) scheduler models EXACTLY the
+    same schedule as the original level-loop formulation: same selections,
+    same surviving Z, same advance — bit-identical, only faster."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.random((3, 16)) < density)
+    fast = make_schedule_step(16, 2)(z)
+    ref = _make_schedule_step_reference(16, 2)(z)
+    np.testing.assert_array_equal(np.asarray(fast.sel), np.asarray(ref.sel))
+    np.testing.assert_array_equal(np.asarray(fast.z_out), np.asarray(ref.z_out))
+    assert int(fast.advance) == int(ref.advance)
+
+
+def test_vectorized_schedule_bit_identical_other_geometries():
+    """Bit-identity holds off the default 16x2 geometry too (fig. 19's
+    2-deep staging buffer, small lane counts)."""
+    rng = np.random.default_rng(0)
+    for n_lanes, lookahead in ((16, 1), (8, 2), (4, 1)):
+        for _ in range(10):
+            z = jnp.asarray(rng.random((lookahead + 1, n_lanes)) < 0.5)
+            fast = make_schedule_step(n_lanes, lookahead)(z)
+            ref = _make_schedule_step_reference(n_lanes, lookahead)(z)
+            np.testing.assert_array_equal(np.asarray(fast.sel), np.asarray(ref.sel))
+            np.testing.assert_array_equal(np.asarray(fast.z_out), np.asarray(ref.z_out))
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,388 @@
+"""v2 kernel family: compacted grid, fused epilogues, emitted output plans.
+
+Covers the ISSUE-4 acceptance surface: property tests of the compacted-grid
+kernel vs dense across densities (ragged per-row nnz, all-zero rows, bf16)
+on both the interpret and reference backends; the O(Kb) cumsum+scatter
+plan compaction vs the legacy argsort oracle; fused-epilogue parity across
+backends; emitted-mask correctness and the metadata-only consumer plans
+built from it; and the fused VJP's emitted-mask backward fast path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import matmul_ref, sparse_ffn_ref, tensordash_matmul_fused_ref
+from repro.kernels.tensordash_spmm import (
+    _mask_to_plan,
+    _mask_to_plan_argsort,
+    dense_plan,
+    plan_blocks,
+    plan_from_mask,
+    planned_grid_steps,
+    tensordash_matmul_fused,
+    tensordash_matmul_planned,
+)
+from repro.runtime import (
+    Runtime,
+    dense_operand_plan,
+    get_backend,
+    plan_from_emitted_mask,
+)
+
+
+def _ragged_operand(rng, m, k, bm, bk, density):
+    """Block-sparse operand with *ragged* per-row nnz: each block row keeps
+    an independent Binomial(Kb, density) subset, so rows differ and some
+    (density small) are entirely zero."""
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    mask = rng.random((m // bm, k // bk)) < density
+    return (a.reshape(m // bm, bm, k // bk, bk) * mask[:, None, :, None]).reshape(m, k)
+
+
+# ---------------------------------------------------------------------------
+# grid compaction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5, 1.0])
+@pytest.mark.parametrize("backend", ["interpret", "reference"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_compacted_grid_matches_dense(density, backend, dtype):
+    """Property sweep: the compacted-grid kernel equals dense math across
+    densities, ragged rows (incl. all-zero rows at density 0), and bf16."""
+    rng = np.random.default_rng(int(density * 100) + len(backend))
+    m, k, n, bm, bk, bn = 64, 128, 48, 16, 32, 16
+    a = jnp.asarray(_ragged_operand(rng, m, k, bm, bk, density)).astype(dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32)).astype(dtype)
+    rt = Runtime(backend=backend, bm=bm, bk=bk, bn=bn)
+    out = rt.matmul(a, b)
+    ref = matmul_ref(a, b)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_compacted_grid_all_zero_rows():
+    """max(nnz) == 0: the dynamic K bound clamps to one (gated) step, which
+    still zero-fills the output."""
+    a = jnp.zeros((32, 64), jnp.float32)
+    nnz, idx = plan_blocks(a, 16, 32)
+    assert int(jnp.max(nnz)) == 0
+    out = tensordash_matmul_planned(
+        nnz, idx, a, jnp.ones((64, 16), jnp.float32), bm=16, bk=32, bn=16,
+        interpret=True,
+    )
+    assert (np.asarray(out) == 0).all()
+
+
+def test_compact_vs_gated_grid_bit_identical():
+    """v2 (compacted) and v1 (full gated grid) execute the same schedule:
+    identical accumulation order, bit-identical outputs."""
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(_ragged_operand(rng, 64, 128, 16, 32, 0.4))
+    b = jnp.asarray(rng.standard_normal((128, 32)).astype(np.float32))
+    nnz, idx = plan_blocks(a, 16, 32)
+    kw = dict(bm=16, bk=32, bn=16, interpret=True)
+    v2 = tensordash_matmul_planned(nnz, idx, a, b, **kw)
+    v1 = tensordash_matmul_planned(nnz, idx, a, b, compact_grid=False, **kw)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
+
+
+def test_grid_steps_scale_with_density():
+    """The paper's core claim, in grid steps: v2 issues max(nnz)/Kb of the
+    v1 grid, so uniform 50% sparsity halves the steps."""
+    rng = np.random.default_rng(0)
+    m, k, bm, bk = 128, 256, 16, 32
+    mb, kb = m // bm, k // bk
+    mask = np.zeros((mb, kb), bool)
+    for r in range(mb):
+        mask[r, rng.choice(kb, kb // 2, replace=False)] = True
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a = jnp.asarray((a.reshape(mb, bm, kb, bk) * mask[:, None, :, None]).reshape(m, k))
+    nnz, idx = plan_blocks(a, bm, bk)
+    v2 = planned_grid_steps(nnz, kb, mb, 4)
+    v1 = planned_grid_steps(nnz, kb, mb, 4, compact_grid=False)
+    assert v1 == mb * 4 * kb
+    assert v2 * 2 == v1
+
+
+# ---------------------------------------------------------------------------
+# O(Kb) plan compaction (satellite: cumsum+scatter replaces argsort)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_mask_to_plan_matches_argsort_oracle(seed):
+    rng = np.random.default_rng(seed)
+    mb, kb = rng.integers(1, 9), rng.integers(1, 17)
+    mask = jnp.asarray(rng.random((mb, kb)) < rng.random())
+    nnz_new, idx_new = _mask_to_plan(mask)
+    nnz_old, idx_old = _mask_to_plan_argsort(mask)
+    np.testing.assert_array_equal(np.asarray(nnz_new), np.asarray(nnz_old))
+    np.testing.assert_array_equal(np.asarray(idx_new), np.asarray(idx_old))
+
+
+def test_mask_to_plan_edge_masks():
+    for mask in (np.zeros((4, 6), bool), np.ones((4, 6), bool)):
+        nnz_new, idx_new = _mask_to_plan(jnp.asarray(mask))
+        nnz_old, idx_old = _mask_to_plan_argsort(jnp.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(nnz_new), np.asarray(nnz_old))
+        np.testing.assert_array_equal(np.asarray(idx_new), np.asarray(idx_old))
+
+
+def test_dense_plan_is_full_and_cached():
+    nnz, idx = dense_plan(3, 5)
+    assert (np.asarray(nnz) == 5).all()
+    np.testing.assert_array_equal(np.asarray(idx), np.tile(np.arange(5), (3, 1)))
+    assert dense_plan(3, 5)[1] is idx  # memoized: zero dispatches on reuse
+
+
+# ---------------------------------------------------------------------------
+# fused epilogues + emitted masks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "squared_relu"])
+@pytest.mark.parametrize("with_bias", [False, True])
+@pytest.mark.parametrize("with_residual", [False, True])
+def test_fused_parity_and_oracle(activation, with_bias, with_residual):
+    """Fused epilogue: interpret (Pallas) == dense == reference bit-exactly,
+    and the math matches the unfused dense formulation."""
+    import zlib
+
+    seed = zlib.crc32(repr((activation, with_bias, with_residual)).encode())
+    rng = np.random.default_rng(seed)
+    m, k, n, bm, bk, bn = 64, 96, 32, 16, 32, 16
+    a = jnp.asarray(_ragged_operand(rng, m, k, bm, bk, 0.5))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal((n,)).astype(np.float32)) if with_bias else None
+    res = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32)) if with_residual else None
+    nnz, idx = plan_blocks(a, bm, bk)
+    kw = dict(bm=bm, bk=bk, bn=bn, activation=activation)
+    out_i, mask_i = tensordash_matmul_fused(nnz, idx, a, b, bias, res, interpret=True, **kw)
+    out_r, mask_r = tensordash_matmul_fused_ref(nnz, idx, a, b, bias, res, **kw)
+    if activation == "squared_relu" and with_residual:
+        # XLA may FMA-contract the square's multiply into the residual add
+        # inside the staged kernel (see the epilogue notes).  FMA-vs-rounded
+        # differ by at most one rounding of the *product* y^2 — which under
+        # cancellation (res ~ -y^2) is far more than 1 ulp of the tiny sum,
+        # hence a product-relative assertion.  y^2 <= |out| + |res|.
+        mag = np.abs(np.asarray(out_r)) + np.abs(np.asarray(res))
+        diff = np.abs(np.asarray(out_i) - np.asarray(out_r))
+        assert (diff <= 2.0 ** -22 * mag + 1e-10).all(), diff.max()
+    else:
+        np.testing.assert_array_equal(np.asarray(out_i), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(mask_i), np.asarray(mask_r))
+    # unfused dense oracle
+    pre = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        pre = pre + bias[None, :]
+    act = {"none": lambda x: x, "relu": lambda x: jnp.maximum(x, 0.0),
+           "squared_relu": lambda x: jnp.square(jnp.maximum(x, 0.0))}[activation](pre)
+    if res is not None:
+        act = act + res
+    np.testing.assert_allclose(np.asarray(out_i), np.asarray(act), rtol=2e-4, atol=2e-4)
+    # the emitted mask is the block-nonzero map of the output
+    blocks = np.asarray(act).reshape(m // bm, bm, n // bn, bn)
+    np.testing.assert_array_equal(
+        np.asarray(mask_i), blocks.any(axis=(1, 3)).astype(np.int8)
+    )
+
+
+def test_emitted_mask_plans_consumer_without_values():
+    """plan_from_mask(emitted) equals plan_blocks(values) — the consumer's
+    plan really is free metadata, including with coarsening."""
+    rng = np.random.default_rng(3)
+    m, k, n, bm, bk, bn = 32, 64, 128, 16, 32, 16
+    a = jnp.asarray(_ragged_operand(rng, m, k, bm, bk, 0.7))
+    # block-prune output columns so the ReLU output is block-sparse
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    colmask = rng.random(n // bn) < 0.5
+    b = jnp.asarray(b * np.repeat(colmask, bn)[None, :])
+    nnz, idx = plan_blocks(a, bm, bk)
+    out, mask = tensordash_matmul_fused(
+        nnz, idx, a, b, activation="relu", bm=bm, bk=bk, bn=bn, interpret=True
+    )
+    # consumer contracting over n with bk2 == bn: granularities match
+    nnz_m, idx_m = plan_from_mask(mask)
+    nnz_v, idx_v = plan_blocks(out, bm, bn)
+    np.testing.assert_array_equal(np.asarray(nnz_m), np.asarray(nnz_v))
+    np.testing.assert_array_equal(np.asarray(idx_m), np.asarray(idx_v))
+    # consumer contracting with bk2 == 2 * bn: coarsened mask plan is
+    # conservative-exact (a coarse block is effectual iff any member is)
+    nnz_c, idx_c = plan_from_mask(mask, coarsen=2)
+    nnz_v2, idx_v2 = plan_blocks(out, bm, 2 * bn)
+    np.testing.assert_array_equal(np.asarray(nnz_c), np.asarray(nnz_v2))
+    np.testing.assert_array_equal(np.asarray(idx_c), np.asarray(idx_v2))
+
+
+def test_plan_from_emitted_mask_geometry():
+    mask = jnp.asarray(np.array([[1, 0, 1, 0], [0, 0, 0, 0]], np.int8))
+    plan = plan_from_emitted_mask(mask, (16, 64), jnp.float32, bm=8, mask_bn=16, bk=32)
+    assert (plan.bm, plan.bk) == (8, 32)  # coarsened 16 -> 32
+    assert plan.shape == (16, 64)
+    np.testing.assert_array_equal(np.asarray(plan.nnz), [2, 0])
+    # non-divisible consumer bk keeps the emitted granularity
+    plan2 = plan_from_emitted_mask(mask, (16, 64), jnp.float32, bm=8, mask_bn=16, bk=24)
+    assert plan2.bk == 16
+
+
+def test_sparse_ffn_fused_path_matches_ref():
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((4, 8, 64)).astype(np.float32)
+    w1 = rng.standard_normal((64, 128)).astype(np.float32)
+    w2 = rng.standard_normal((128, 64)).astype(np.float32)
+    for backend in ("interpret", "reference"):
+        rt = Runtime(backend=backend, bm=16, bk=32, bn=16)
+        out = rt.sparse_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2))
+        ref = sparse_ffn_ref(
+            jnp.asarray(x.reshape(32, 64)), jnp.asarray(w1), jnp.asarray(w2)
+        ).reshape(4, 8, 64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused VJP: emitted-mask backward fast path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ["relu", "squared_relu"])
+def test_fused_vjp_matches_dense_grads(activation):
+    rng = np.random.default_rng(11)
+    m, k, n, bm, bk, bn = 32, 64, 32, 16, 32, 16
+    a = jnp.asarray(_ragged_operand(rng, m, k, bm, bk, 0.6))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal((n,)).astype(np.float32))
+    rt = Runtime(backend="interpret", bm=bm, bk=bk, bn=bn)
+    act = {"relu": lambda x: jnp.maximum(x, 0.0),
+           "squared_relu": lambda x: jnp.square(jnp.maximum(x, 0.0))}[activation]
+
+    def loss_fused(a, b, bias):
+        out, _ = rt.matmul_fused(a, b, bias=bias, activation=activation)
+        return jnp.sum(jnp.square(out))
+
+    def loss_dense(a, b, bias):
+        return jnp.sum(jnp.square(act(a @ b + bias[None, :])))
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2))(a, b, bias)
+    gd = jax.grad(loss_dense, argnums=(0, 1, 2))(a, b, bias)
+    for got, want in zip(gf, gd):
+        scale = max(float(jnp.abs(want).max()), 1.0)
+        np.testing.assert_allclose(
+            np.asarray(got) / scale, np.asarray(want) / scale, rtol=2e-3, atol=2e-3
+        )
+
+
+def test_fused_vjp_backward_plans_are_metadata_only(monkeypatch):
+    """With a ReLU epilogue, neither backward product replans from values:
+    Eq. 2's plan comes from the emitted mask, Eq. 3's from the forward
+    plan's transpose.  Assert by making values-planning explode."""
+    import repro.runtime.autodiff as ad
+
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(_ragged_operand(rng, 32, 64, 16, 32, 0.5))
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    rt = Runtime(backend="reference", bm=16, bk=32, bn=16)
+
+    def boom(*args, **kw):  # pragma: no cover - should never run
+        raise AssertionError("backward planned the cotangent from values")
+
+    monkeypatch.setattr(ad, "_cot_plan", boom)
+
+    def loss(a, b):
+        out, _ = rt.matmul_fused(a, b, activation="relu", assume_dense=True)
+        return jnp.sum(out)
+
+    da, db = jax.grad(loss, argnums=(0, 1))(a, b)
+    assert np.isfinite(np.asarray(da)).all() and np.isfinite(np.asarray(db)).all()
+
+
+def test_fused_vjp_refuses_relu_family_with_residual():
+    """The backward cannot exactly recover the pre-residual activation from
+    the stored output (cancellation drops whole gradients, not ulps), so
+    differentiating relu/squared_relu + residual must refuse loudly.
+    Inference (primal-only) residual fusion stays supported."""
+    rng = np.random.default_rng(13)
+    a = jnp.asarray(_ragged_operand(rng, 32, 64, 16, 32, 0.5))
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    res = jnp.asarray(rng.standard_normal((32, 32)).astype(np.float32))
+    rt = Runtime(backend="reference", bm=16, bk=32, bn=16)
+    out, _ = rt.matmul_fused(a, b, residual=res, activation="relu")  # primal ok
+    assert np.isfinite(np.asarray(out)).all()
+    with pytest.raises(NotImplementedError, match="residual"):
+        jax.grad(
+            lambda a: jnp.sum(rt.matmul_fused(a, b, residual=res, activation="relu")[0])
+        )(a)
+    # activation="none" + residual is exact (act' = 1): differentiable
+    g = jax.grad(
+        lambda a: jnp.sum(rt.matmul_fused(a, b, residual=res, activation="none")[0])
+    )(a)
+    np.testing.assert_allclose(
+        np.asarray(g), np.asarray(jnp.ones((32, 32)) @ b.T), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_concrete_eager_calls_bypass_custom_vjp_but_grad_still_works():
+    """Eager concrete planned calls skip the custom_vjp wrapper (pure
+    dispatch saving); under jax.grad the operands are tracers and the
+    sparsity-aware rule still runs — same values both ways."""
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(_ragged_operand(rng, 32, 64, 16, 32, 0.5))
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    rt = Runtime(backend="reference", bm=16, bk=32, bn=16)
+    eager = rt.matmul(a, b)  # concrete: raw executor
+    traced = jax.jit(lambda a, b: rt.matmul(a, b))(a, b)  # tracers: custom_vjp
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(traced))
+    g = jax.grad(lambda a: jnp.sum(rt.matmul(a, b)))(a)
+    np.testing.assert_allclose(
+        np.asarray(g), np.asarray(jnp.ones((32, 32)) @ b.T), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_dense_operand_plan_matches_value_plan():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((32, 64)).astype(np.float32))
+    meta = dense_operand_plan(x.shape, x.dtype, bm=16, bk=32)
+    nnz_v, idx_v = plan_blocks(x, 16, 32)  # x is dense: value plan is full
+    np.testing.assert_array_equal(np.asarray(meta.nnz), np.asarray(nnz_v))
+    np.testing.assert_array_equal(np.asarray(meta.idx), np.asarray(idx_v))
+
+
+def test_matmul_fused_dense_shortcut_matches_sparse_path():
+    """A dense runtime's matmul_fused takes the one-dot shortcut (like
+    matmul's dense path) — same math and same structural mask as the
+    planned executors."""
+    rng = np.random.default_rng(14)
+    a = jnp.asarray(_ragged_operand(rng, 32, 64, 16, 32, 0.6))
+    b = rng.standard_normal((64, 32)).astype(np.float32)
+    b = jnp.asarray(b * np.repeat(rng.random(2) < 0.5, 16)[None, :])
+    bias = jnp.asarray(rng.standard_normal((32,)).astype(np.float32))
+    out_d, mask_d = Runtime(backend="dense", bm=16, bk=32, bn=16).matmul_fused(
+        a, b, bias=bias, activation="relu"
+    )
+    out_s, mask_s = Runtime(backend="reference", bm=16, bk=32, bn=16).matmul_fused(
+        a, b, bias=bias, activation="relu"
+    )
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_s), rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(np.asarray(mask_d), np.asarray(mask_s))
+
+
+def test_fused_backends_agree_through_registry():
+    """execute_fused parity across every CPU-runnable backend, via the
+    registry exactly as the runtime dispatches it."""
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(_ragged_operand(rng, 32, 64, 16, 32, 0.4))
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    rt = Runtime(backend="interpret", bm=16, bk=32, bn=16)
+    plan = rt.plan(a)
+    outs = {}
+    for name in ("dense", "reference", "interpret"):
+        out, mask = get_backend(name).matmul_fused(
+            plan, a, b, activation="relu", bn=16
+        )
+        outs[name] = (np.asarray(out), np.asarray(mask))
+    for name in ("reference", "interpret"):
+        np.testing.assert_array_equal(outs["dense"][0], outs[name][0])
+        np.testing.assert_array_equal(outs["dense"][1], outs[name][1])
