@@ -219,21 +219,91 @@ def bench_spmm_compacted():
     nnz, idx = plan_blocks(a, bm, bk)
 
     kw = dict(bm=bm, bk=bk, bn=bn, interpret=True)
-    v2 = lambda: tensordash_matmul_planned(nnz, idx, a, b, **kw).block_until_ready()
+    v2 = lambda: tensordash_matmul_planned(
+        nnz, idx, a, b, compact_grid=True, **kw
+    ).block_until_ready()
     v1 = lambda: tensordash_matmul_planned(
         nnz, idx, a, b, compact_grid=False, **kw
     ).block_until_ready()
     v2(), v1()  # warm
     t2, t1 = _best_of(v2, reps=30), _best_of(v1, reps=30)
-    s2 = planned_grid_steps(nnz, kb, mb, nb)
+    s2 = planned_grid_steps(nnz, kb, mb, nb, compact_grid=True)
     s1 = planned_grid_steps(nnz, kb, mb, nb, compact_grid=False)
     err = float(jnp.abs(
-        tensordash_matmul_planned(nnz, idx, a, b, **kw) - a @ b
+        tensordash_matmul_planned(nnz, idx, a, b, compact_grid=True, **kw) - a @ b
     ).max())
     return t2, (
         f"grid_steps v1={s1} v2={s2} ({s1 / s2:.2f}x fewer) "
         f"wall v1={t1:.0f}us v2={t2:.0f}us ({t1 / max(t2, 1e-9):.2f}x) "
         f"density=50% max_err={err:.1e}"
+    )
+
+
+def bench_spmm_ragged():
+    """The v3 ragged work-queue win: wall-clock tracks ``sum(nnz)``, not
+    ``Mb * max(nnz)``, under skewed per-row sparsity.
+
+    Power-law row-density workload at 50% *mean* block density: a couple of
+    dense rows pin v2's per-call ``max(nnz)`` bound at the full Kb, so its
+    compacted grid degenerates to dense cost for every row; v3's flat
+    ``(Nb, total_work)`` grid issues exactly one step per effectual block.
+    Same plan, same operands, interpret mode, bit-identical outputs across
+    v2/v3/dense — the acceptance gates (steps == sum(nnz) exactly; >= 1.5x
+    wall over v2) are asserted here, so a regression fails the smoke job.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.ref import tensordash_matmul_ref
+    from repro.kernels.tensordash_spmm import (
+        plan_blocks,
+        planned_grid_steps,
+        tensordash_matmul_planned,
+    )
+
+    rng = np.random.default_rng(0)
+    m, k, n, bm, bk, bn = 128, 256, 64, 16, 32, 16
+    mb, kb, nb = m // bm, k // bk, n // bn
+    # power-law (Zipf-like) per-row effectual counts, scaled to a 50% mean:
+    # nnz = [8, 8, 6, 4, 2, 2, 1, 1] over kb=8 — sum is exactly mb*kb/2,
+    # while max(nnz) == kb pins v2 at the full dense grid
+    row_nnz = np.array([8, 8, 6, 4, 2, 2, 1, 1], np.int64)
+    assert len(row_nnz) == mb and row_nnz.sum() * 2 == mb * kb and row_nnz.max() == kb
+    mask = np.zeros((mb, kb), bool)
+    for r in range(mb):
+        mask[r, rng.choice(kb, int(row_nnz[r]), replace=False)] = True
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    a = jnp.asarray((a.reshape(mb, bm, kb, bk) * mask[:, None, :, None]).reshape(m, k))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    nnz, idx = plan_blocks(a, bm, bk)
+
+    kw = dict(bm=bm, bk=bk, bn=bn, interpret=True)
+    v3 = lambda: tensordash_matmul_planned(nnz, idx, a, b, **kw).block_until_ready()
+    v2 = lambda: tensordash_matmul_planned(
+        nnz, idx, a, b, compact_grid=True, **kw
+    ).block_until_ready()
+    out3, out2 = v3(), v2()  # warm (trace + compile)
+    ref = tensordash_matmul_ref(nnz, idx, a, b, bm=bm, bk=bk, bn=bn)
+    if not (np.asarray(out3) == np.asarray(out2)).all():
+        raise AssertionError("v3 output differs from v2")
+    if not (np.asarray(out3) == np.asarray(ref)).all():
+        raise AssertionError("v3 output differs from the reference executor")
+    t3, t2 = _best_of(v3, reps=30), _best_of(v2, reps=30)
+    s3 = planned_grid_steps(nnz, kb, mb, nb)  # ragged default
+    s2 = planned_grid_steps(nnz, kb, mb, nb, compact_grid=True)
+    if s3 != nb * int(row_nnz.sum()):
+        raise AssertionError(f"v3 steps {s3} != Nb*sum(nnz) {nb * int(row_nnz.sum())}")
+    speedup = t2 / max(t3, 1e-9)
+    if speedup < 1.5:
+        raise AssertionError(
+            f"v3 wall speedup {speedup:.2f}x < 1.5x over v2 on the power-law "
+            f"workload (v2={t2:.0f}us v3={t3:.0f}us)"
+        )
+    err = float(jnp.abs(tensordash_matmul_planned(nnz, idx, a, b, **kw) - a @ b).max())
+    return t3, (
+        f"grid_steps v2={s2} v3={s3} ({s2 / s3:.2f}x fewer) "
+        f"wall v2={t2:.0f}us v3={t3:.0f}us ({speedup:.2f}x) "
+        f"mean_density=50% max_row=dense bitwise v2==v3==ref max_err={err:.1e}"
     )
 
 
@@ -403,6 +473,7 @@ BENCHES = [
     ("scheduler_step_micro", bench_scheduler_step),
     ("tensordash_spmm_micro", bench_spmm_kernel),
     ("spmm_compacted_micro", bench_spmm_compacted),
+    ("spmm_ragged_micro", bench_spmm_ragged),
     ("ffn_fused_micro", bench_ffn_fused),
     ("plan_cache_micro", bench_plan_cache),
     ("backward_planned_micro", bench_backward_planned),
@@ -414,6 +485,7 @@ SMOKE = {
     "scheduler_step_micro",
     "tensordash_spmm_micro",
     "spmm_compacted_micro",
+    "spmm_ragged_micro",
     "ffn_fused_micro",
     "plan_cache_micro",
     "backward_planned_micro",

@@ -3,6 +3,12 @@
 Backend selection lives in ``repro.runtime``; ``repro.kernels.ops`` wrappers
 take ``runtime=`` (the old ``mode=`` shims have been removed).
 """
-from repro.kernels.tensordash_spmm import plan_blocks, tensordash_matmul, tensordash_matmul_planned
+from repro.kernels.tensordash_spmm import (
+    plan_blocks,
+    plan_blocks_csr,
+    plan_workqueue,
+    tensordash_matmul,
+    tensordash_matmul_planned,
+)
 from repro.kernels.block_mask import block_zero_mask
 from repro.kernels.ref import tensordash_matmul_ref

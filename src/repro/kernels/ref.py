@@ -32,6 +32,26 @@ def plan_blocks_ref(a: np.ndarray, bm: int, bk: int):
     return nnz, idx
 
 
+def plan_workqueue_ref(nnz: np.ndarray, idx: np.ndarray):
+    """Reference (loopy numpy) CSR work queue for property tests: one item
+    per effectual block in row-major plan order, all-zero rows keeping one
+    gated placeholder — the oracle for
+    ``repro.kernels.tensordash_spmm.plan_workqueue``."""
+    mb, kb = idx.shape
+    row_starts = np.zeros(mb + 1, np.int32)
+    work_row = np.zeros(mb * kb, np.int32)
+    work_kblk = np.zeros(mb * kb, np.int32)
+    t = 0
+    for m in range(mb):
+        row_starts[m] = t
+        for j in range(max(int(nnz[m]), 1)):
+            work_row[t] = m
+            work_kblk[t] = idx[m, j]
+            t += 1
+    row_starts[mb] = t
+    return row_starts, work_row, work_kblk
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype"))
 def tensordash_matmul_ref(nnz, idx, a, b, *, bm: int, bk: int, bn: int, out_dtype=None):
     """Plan-driven block-sparse ``a @ b`` in pure jnp.

@@ -30,6 +30,22 @@ with a restricted-movement interconnect* — becomes, at TPU block granularity:
    skipped step gated but still issued — is kept behind
    ``compact_grid=False`` for A/B benchmarking (``spmm_compacted_micro``).
 
+3b. **Ragged work-queue grid** (v3, the default): v2's bound is the per-call
+   ``max(nnz)``, so one dense row drags every row back to dense cost —
+   skewed sparsity (the common case for trained activations/gradients) pays
+   ``Mb * max(nnz)`` steps for ``sum(nnz)`` work.  v3 flattens the plan into
+   a CSR-style work queue (:func:`plan_workqueue`): ``row_starts =
+   cumsum(max(nnz, 1))`` plus flat ``work_row[t]`` / ``work_kblk[t]`` lists,
+   one entry per *effectual* block (all-zero rows keep one gated entry so
+   their output still zero-fills).  The kernel then issues a
+   ``(Nb, total_work)`` grid whose scalar-prefetch index maps derive
+   ``(m_i, k_idx)`` per step; the accumulator zeroes at ``t ==
+   row_starts[m]`` and stores at ``t == row_starts[m+1] - 1``.  Kernel steps
+   equal effectual blocks *exactly*, independent of skew — wall-clock is
+   ``O(sum(nnz))``, not ``O(Mb * max(nnz))`` — and per-row accumulation
+   order is unchanged (ascending plan order), so v3 is bit-identical to v2
+   and v1 (``spmm_ragged_micro`` gates the skew win in CI).
+
 4. **Fused epilogues + emitted output plans** (§3.7 backside scheduler):
    :func:`tensordash_matmul_fused` applies bias + activation (+ optional
    residual add + out-dtype cast) inside the store step — no HBM round-trip
@@ -69,11 +85,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
+    "COMPACT_GRID_MODES",
     "plan_blocks",
+    "plan_blocks_csr",
     "plan_to_mask",
     "plan_from_mask",
+    "plan_from_mask_csr",
+    "plan_workqueue",
     "dense_plan",
+    "dense_plan_csr",
     "transpose_plan",
+    "transpose_plan_csr",
     "planned_grid_steps",
     "tensordash_matmul_planned",
     "tensordash_matmul_fused",
@@ -82,6 +104,24 @@ __all__ = [
 
 #: epilogue activations the fused kernel understands (statically selected)
 FUSED_ACTIVATIONS = ("none", "relu", "squared_relu")
+
+
+#: valid ``compact_grid`` modes: v3 ragged work queue / v2 max(nnz) bound /
+#: v1 full gated grid
+COMPACT_GRID_MODES = ("ragged", True, False)
+
+
+def _check_compact_grid(value):
+    """Reject unrecognized grid modes loudly: any stray truthy value (a
+    typo'd string, a future mode name) would otherwise silently select the
+    v2 branch — numerically correct, so the user would never notice they
+    lost the skew-immune v3 behavior they asked for."""
+    if not any(value is m or value == m for m in COMPACT_GRID_MODES):
+        raise ValueError(
+            f"compact_grid={value!r} not one of {COMPACT_GRID_MODES} "
+            '("ragged" = v3 work queue, True = v2 max(nnz) grid, '
+            "False = v1 full gated grid)"
+        )
 
 
 def _compiler_params(**kw):
@@ -149,6 +189,58 @@ def plan_blocks(a: jax.Array, bm: int, bk: int):
     return _mask_to_plan(nonzero)
 
 
+@jax.jit
+def plan_workqueue(nnz: jax.Array, idx: jax.Array):
+    """Flatten a ``(nnz, idx)`` plan into the v3 CSR-style work queue.
+
+    Returns ``(row_starts [Mb+1], work_row [Mb*Kb], work_kblk [Mb*Kb])``,
+    all int32: work item ``t`` in ``[row_starts[m], row_starts[m+1])``
+    belongs to block row ``m`` and contracts K block ``work_kblk[t] =
+    idx[m, t - row_starts[m]]``.  Every row owns at least one item
+    (``max(nnz, 1)``) so an all-zero row still gets a gated step that
+    zero-fills its output; ``row_starts[-1]`` is the total work — the exact
+    number of grid steps the ragged kernel issues per N block.  The flat
+    arrays are statically ``Mb * Kb`` long (the dense worst case, the same
+    footprint as ``idx``); the tail past ``row_starts[-1]`` is never
+    visited.  Pure metadata — O(Mb*Kb) elementwise work, no pass over the
+    operand values, one fused dispatch — so deriving the queue from an
+    emitted mask or a transposed plan stays allocation-pattern-identical to
+    v2 planning.
+    """
+    mb, kb = idx.shape
+    flat = mb * kb
+    work = jnp.maximum(nnz, 1).astype(jnp.int32)  # [Mb] items per row
+    row_starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(work, dtype=jnp.int32)]
+    )
+    j = jnp.arange(kb, dtype=jnp.int32)[None, :]
+    # scatter item (m, j) to flat slot row_starts[m] + j; surplus j >= work[m]
+    # drops out of bounds
+    pos = jnp.where(j < work[:, None], row_starts[:-1, None] + j, flat)
+    rows = jnp.broadcast_to(jnp.arange(mb, dtype=jnp.int32)[:, None], (mb, kb))
+    work_row = (
+        jnp.zeros((flat,), jnp.int32).at[pos.reshape(-1)].set(rows.reshape(-1), mode="drop")
+    )
+    work_kblk = (
+        jnp.zeros((flat,), jnp.int32).at[pos.reshape(-1)].set(idx.reshape(-1), mode="drop")
+    )
+    return row_starts, work_row, work_kblk
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def plan_blocks_csr(a: jax.Array, bm: int, bk: int):
+    """:func:`plan_blocks` plus the v3 work queue, in one fused dispatch.
+
+    Returns ``(nnz, idx, row_starts, work_row, work_kblk)`` — the full
+    :class:`~repro.runtime.plan.SparsityPlan` payload.  One jitted program
+    (mask reduction, compaction and queue flattening all inline into this
+    trace) vs the two+ dispatches of ``plan_blocks`` followed by
+    :func:`plan_workqueue`.
+    """
+    nnz, idx = plan_blocks(a, bm, bk)
+    return (nnz, idx) + plan_workqueue(nnz, idx)
+
+
 def plan_to_mask(nnz: jax.Array, idx: jax.Array) -> jax.Array:
     """Recover the block-nonzero mask ``[Mb, Kb]`` a plan was compacted from.
 
@@ -182,6 +274,19 @@ def plan_from_mask(mask: jax.Array, *, coarsen: int = 1):
     return _mask_to_plan(nonzero)
 
 
+@functools.partial(jax.jit, static_argnames=("coarsen",))
+def plan_from_mask_csr(mask: jax.Array, *, coarsen: int = 1):
+    """:func:`plan_from_mask` plus the v3 work queue, one fused dispatch.
+
+    The emitted-mask replanning path stays a single jitted program (and the
+    same allocation pattern as v2 planning — the queue arrays are the
+    ``idx``-sized metadata the plan already carries, flattened): the §3.7
+    backside scheduler hands its consumer the *ragged* schedule for free.
+    """
+    nnz, idx = plan_from_mask(mask, coarsen=coarsen)
+    return (nnz, idx) + plan_workqueue(nnz, idx)
+
+
 @functools.lru_cache(maxsize=256)
 def dense_plan(mb: int, kb: int):
     """The trivial all-effectual plan — pure metadata (no operand pass).
@@ -205,6 +310,22 @@ def dense_plan(mb: int, kb: int):
     return nnz, idx
 
 
+@functools.lru_cache(maxsize=256)
+def dense_plan_csr(mb: int, kb: int):
+    """:func:`dense_plan` plus its (closed-form) v3 work queue — numpy,
+    memoized per geometry, zero dispatches: the dense queue is just every
+    ``(m, k)`` pair in row-major order with ``row_starts = m * Kb``."""
+    nnz, idx = dense_plan(mb, kb)
+    row_starts = np.arange(mb + 1, dtype=np.int32) * kb
+    work_row = np.repeat(np.arange(mb, dtype=np.int32), kb)
+    work_kblk = np.ascontiguousarray(
+        np.broadcast_to(np.arange(kb, dtype=np.int32), (mb, kb))
+    ).reshape(-1)
+    for arr in (row_starts, work_row, work_kblk):
+        arr.flags.writeable = False
+    return nnz, idx, row_starts, work_row, work_kblk
+
+
 def transpose_plan(nnz: jax.Array, idx: jax.Array):
     """Plan of ``a.T`` (blocks ``bk x bm``) from the plan of ``a``.
 
@@ -217,12 +338,44 @@ def transpose_plan(nnz: jax.Array, idx: jax.Array):
     return _mask_to_plan(plan_to_mask(nnz, idx).T)
 
 
-def planned_grid_steps(nnz, kb: int, mb: int, nb: int, *, compact_grid: bool = True) -> int:
+@jax.jit
+def transpose_plan_csr(nnz: jax.Array, idx: jax.Array):
+    """:func:`transpose_plan` plus the transposed plan's v3 work queue —
+    still a pure metadata transform (one fused dispatch), so the backward
+    weight-gradient product (paper Eq. 3) rides the ragged grid without a
+    second pass over ``a``."""
+    nnz_t, idx_t = _mask_to_plan(plan_to_mask(nnz, idx).T)
+    return (nnz_t, idx_t) + plan_workqueue(nnz_t, idx_t)
+
+
+def planned_grid_steps(nnz, kb: int, mb: int, nb: int, *, compact_grid="ragged") -> int:
     """Grid steps the planned kernel will issue — the "time" the paper's
     scheduler buys.  v1 (``compact_grid=False``) always issues the full
-    ``Mb * Nb * Kb``; v2 issues ``Mb * Nb * max(nnz, 1)``.  Concrete plans
-    only (benchmark/report helper)."""
-    kdim = kb if not compact_grid else max(int(jnp.max(nnz)), 1)
+    ``Mb * Nb * Kb``; v2 (``True``) issues ``Mb * Nb * max(nnz, 1)``; v3
+    (``"ragged"``) issues ``Nb * sum(max(nnz, 1))`` — effectual blocks
+    exactly (plus one gated zero-fill step per all-zero row), independent
+    of skew.
+
+    Concrete plans only (this is a benchmark/report helper, not a kernel
+    primitive): the counts are computed host-side from ``nnz`` in one
+    device fetch.  Under ``jit``/``grad`` the plan is a tracer and the
+    reduction would silently block on the device — raise a clear error
+    instead; call this outside the traced region, or use
+    ``SparsityPlan.grid_steps`` which serves cached host-side stats.
+    """
+    _check_compact_grid(compact_grid)
+    if isinstance(nnz, jax.core.Tracer):
+        raise TypeError(
+            "planned_grid_steps needs a concrete plan: nnz is a tracer "
+            "(inside jit/grad/scan), and counting grid steps would force a "
+            "blocking device sync mid-trace — compute step counts outside "
+            "the traced region (e.g. via SparsityPlan.grid_steps, which "
+            "caches host-side plan stats)"
+        )
+    nnz_h = np.asarray(nnz)
+    if compact_grid == "ragged":
+        return nb * int(np.maximum(nnz_h, 1).sum())
+    kdim = kb if not compact_grid else max(int(nnz_h.max(initial=0)), 1)
     return mb * nb * kdim
 
 
@@ -302,9 +455,94 @@ def _fused_kernel(nnz_ref, idx_ref, a_ref, b_ref, *rest,
         o_ref[...] = out.astype(o_ref.dtype)
 
 
+def _ragged_kernel(nnz_ref, rs_ref, wr_ref, wk_ref, a_ref, b_ref, o_ref, acc_ref):
+    """v3 work-queue kernel: grid ``(Nb, total_work)``; step ``t`` is one
+    effectual block of row ``wr_ref[t]`` (or the single gated zero-fill item
+    of an all-zero row).  Per-row accumulation order is ascending plan
+    order, exactly as v1/v2 — bit-identical outputs."""
+    t = pl.program_id(1)
+    m_i = wr_ref[t]
+
+    @pl.when(t == rs_ref[m_i])
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # All queue items of a row with nnz > 0 are effectual by construction;
+    # the only gated item is an all-zero row's zero-fill placeholder.
+    @pl.when(nnz_ref[m_i] > 0)
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(t == rs_ref[m_i + 1] - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _ragged_fused_kernel(nnz_ref, rs_ref, wr_ref, wk_ref, a_ref, b_ref, *rest,
+                         activation: str, has_bias: bool, has_residual: bool):
+    rest = list(rest)
+    bias_ref = rest.pop(0) if has_bias else None
+    res_ref = rest.pop(0) if has_residual else None
+    o_ref, mask_ref, acc_ref = rest
+    t = pl.program_id(1)
+    m_i = wr_ref[t]
+
+    @pl.when(t == rs_ref[m_i])
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(nnz_ref[m_i] > 0)
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(t == rs_ref[m_i + 1] - 1)
+    def _store():
+        out = _epilogue(
+            acc_ref[...],
+            bias_ref[...] if has_bias else None,
+            res_ref[...].astype(jnp.float32) if has_residual else None,
+            activation,
+        )
+        mask_ref[0, 0] = jnp.any(out != 0).astype(jnp.int8)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _ragged_grid_and_maps(nnz, idx, nb: int, workqueue):
+    """v3 grid geometry: a flat ``(Nb, total_work)`` grid over the CSR work
+    queue.  ``total_work = row_starts[-1] = sum(max(nnz, 1))`` is dynamic
+    per call; the scalar-prefetch index maps dereference the queue to place
+    each step at ``(work_row[t], work_kblk[t])``.  The queue is derived from
+    ``(nnz, idx)`` in-graph when the caller has none cached (a pure metadata
+    transform XLA hoists out of loops), or reused verbatim from the
+    :class:`~repro.runtime.plan.SparsityPlan` that carries it."""
+    if workqueue is None:
+        workqueue = plan_workqueue(nnz, idx)
+    row_starts, work_row, work_kblk = workqueue
+    grid = (nb, row_starts[-1])
+
+    def a_map(n_i, t, nnz_ref, rs_ref, wr_ref, wk_ref):
+        del n_i, nnz_ref, rs_ref
+        return (wr_ref[t], wk_ref[t])
+
+    def b_map(n_i, t, nnz_ref, rs_ref, wr_ref, wk_ref):
+        del nnz_ref, rs_ref, wr_ref
+        return (wk_ref[t], n_i)
+
+    def o_map(n_i, t, nnz_ref, rs_ref, wr_ref, wk_ref):
+        del nnz_ref, rs_ref, wk_ref
+        return (wr_ref[t], n_i)
+
+    return (row_starts, work_row, work_kblk), grid, a_map, b_map, o_map
+
+
 def _grid_and_maps(nnz, mb: int, nb: int, kb: int, compact_grid: bool):
-    """Common grid geometry: the K dimension is the dynamic compacted bound
-    ``max(nnz)`` (>= 1 so the zero accumulator still stores) or static Kb."""
+    """Common v1/v2 grid geometry: the K dimension is the dynamic compacted
+    bound ``max(nnz)`` (>= 1 so the zero accumulator still stores) or the
+    static Kb."""
     kdim = jnp.maximum(jnp.max(nnz), 1) if compact_grid else kb
     grid = (mb, nb, kdim)
 
@@ -338,17 +576,26 @@ def tensordash_matmul_planned(
     bn: int = 128,
     interpret: bool = False,
     out_dtype=None,
-    compact_grid: bool = True,
+    compact_grid="ragged",
+    workqueue=None,
 ):
     """Block-sparse ``a @ b`` given a precomputed block plan (see
     :func:`plan_blocks`).  Splitting planning from execution lets the plan be
     produced by the *backside scheduler* (paper §3.7): e.g. the op that wrote
     ``a`` emits the plan alongside, so consumers skip the replanning pass.
 
-    With ``compact_grid`` (default) the K grid dimension is the dynamic
-    per-call ``max(nnz)``: ineffectual blocks are skipped *in time* (zero
-    grid steps), not merely gated; ``compact_grid=False`` restores the v1
-    full-grid gated behaviour for A/B measurement."""
+    ``compact_grid`` selects the grid family — all three execute the same
+    per-row schedule and are bit-identical:
+
+    * ``"ragged"`` (default, v3): flat ``(Nb, total_work)`` work-queue grid;
+      steps equal effectual blocks exactly (``O(sum(nnz))``), skew-immune.
+      ``workqueue`` optionally supplies the precomputed
+      ``(row_starts, work_row, work_kblk)`` triple (e.g. from a
+      ``SparsityPlan`` that carries it); otherwise it is derived in-graph.
+    * ``True`` (v2): ``(Mb, Nb, max(nnz))`` grid — one dense row drags every
+      row to dense cost.
+    * ``False`` (v1): full ``(Mb, Nb, Kb)`` gated grid, for A/B baselines.
+    """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -356,9 +603,19 @@ def tensordash_matmul_planned(
     mb, kb, nb = m // bm, k // bk, n // bn
     out_dtype = out_dtype or a.dtype
 
-    grid, a_map, b_map, o_map = _grid_and_maps(nnz, mb, nb, kb, compact_grid)
+    _check_compact_grid(compact_grid)
+    if compact_grid == "ragged":
+        wq, grid, a_map, b_map, o_map = _ragged_grid_and_maps(nnz, idx, nb, workqueue)
+        operands = (nnz,) + wq + (a, b)
+        kernel, num_prefetch = _ragged_kernel, 4
+        semantics = ("parallel", "arbitrary")
+    else:
+        grid, a_map, b_map, o_map = _grid_and_maps(nnz, mb, nb, kb, compact_grid)
+        operands = (nnz, idx, a, b)
+        kernel, num_prefetch = _kernel, 2
+        semantics = ("parallel", "parallel", "arbitrary")
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=num_prefetch,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), a_map),
@@ -368,14 +625,12 @@ def tensordash_matmul_planned(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        compiler_params=_compiler_params(dimension_semantics=semantics),
         interpret=interpret,
-    )(nnz, idx, a, b)
+    )(*operands)
 
 
 @functools.partial(
@@ -397,7 +652,8 @@ def tensordash_matmul_fused(
     bn: int = 128,
     interpret: bool = False,
     out_dtype=None,
-    compact_grid: bool = True,
+    compact_grid="ragged",
+    workqueue=None,
 ):
     """Planned ``act(a @ b + bias) + residual`` with the epilogue fused into
     the store step, plus the emitted output plan.
@@ -408,6 +664,8 @@ def tensordash_matmul_fused(
     of the fp32 epilogue value: the §3.7 backside scheduler emitting the
     *consumer's* schedule alongside the producer's data.  Feed it to
     :func:`plan_from_mask` to plan the next matmul without touching values.
+    ``compact_grid``/``workqueue`` select the grid family exactly as in
+    :func:`tensordash_matmul_planned` (default: the v3 ragged work queue).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -418,17 +676,30 @@ def tensordash_matmul_fused(
     mb, kb, nb = m // bm, k // bk, n // bn
     out_dtype = out_dtype or a.dtype
 
-    grid, a_map, b_map, o_map = _grid_and_maps(nnz, mb, nb, kb, compact_grid)
+    _check_compact_grid(compact_grid)
+    if compact_grid == "ragged":
+        wq, grid, a_map, b_map, o_map = _ragged_grid_and_maps(nnz, idx, nb, workqueue)
+        operands = list((nnz,) + wq + (a, b))
+        base_kernel, num_prefetch = _ragged_fused_kernel, 4
+        semantics = ("parallel", "arbitrary")
 
-    def bias_map(m_i, n_i, k_i, nnz_ref, idx_ref):
-        del m_i, k_i, nnz_ref, idx_ref
-        return (0, n_i)
+        def bias_map(n_i, t, nnz_ref, rs_ref, wr_ref, wk_ref):
+            del t, nnz_ref, rs_ref, wr_ref, wk_ref
+            return (0, n_i)
+    else:
+        grid, a_map, b_map, o_map = _grid_and_maps(nnz, mb, nb, kb, compact_grid)
+        operands = [nnz, idx, a, b]
+        base_kernel, num_prefetch = _fused_kernel, 2
+        semantics = ("parallel", "parallel", "arbitrary")
+
+        def bias_map(m_i, n_i, k_i, nnz_ref, idx_ref):
+            del m_i, k_i, nnz_ref, idx_ref
+            return (0, n_i)
 
     in_specs = [
         pl.BlockSpec((bm, bk), a_map),
         pl.BlockSpec((bk, bn), b_map),
     ]
-    operands = [nnz, idx, a, b]
     if bias is not None:
         assert bias.shape == (n,), (bias.shape, n)
         in_specs.append(pl.BlockSpec((1, bn), bias_map))
@@ -439,7 +710,7 @@ def tensordash_matmul_fused(
         operands.append(residual)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=num_prefetch,
         grid=grid,
         in_specs=in_specs,
         out_specs=[
@@ -449,7 +720,7 @@ def tensordash_matmul_fused(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     kernel = functools.partial(
-        _fused_kernel,
+        base_kernel,
         activation=activation,
         has_bias=bias is not None,
         has_residual=residual is not None,
@@ -461,9 +732,7 @@ def tensordash_matmul_fused(
             jax.ShapeDtypeStruct((m, n), out_dtype),
             jax.ShapeDtypeStruct((mb, nb), jnp.int8),
         ],
-        compiler_params=_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        compiler_params=_compiler_params(dimension_semantics=semantics),
         interpret=interpret,
     )(*operands)
 
@@ -477,7 +746,7 @@ def tensordash_matmul(
     bn: int = 128,
     interpret: bool = False,
     out_dtype=None,
-    compact_grid: bool = True,
+    compact_grid="ragged",
 ):
     """Dynamic block-sparse ``a @ b``: plan at run time, then execute."""
     nnz, idx = plan_blocks(a, bm, bk)

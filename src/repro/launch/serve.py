@@ -115,6 +115,15 @@ def main() -> None:
           f"   e2e p50={_pct(e2e,50)*1e3:.0f}ms p95={_pct(e2e,95)*1e3:.0f}ms")
     print(f"plan cache: {pc['hits']} hits / {pc['misses']} misses / "
           f"{pc['traced']} traced-in-program")
+    # per-plan skew report: total_work is the exact v3 ragged-grid step
+    # count per output-column block — alongside the skipped fraction it
+    # makes row-density skew (the thing v3's work queue absorbs and v2's
+    # max(nnz) bound could not) observable in production traces
+    for ps in rt.plan_cache.plan_stats():
+        print(f"  plan key={ps['key']!r} side={ps['side']} "
+              f"shape={tuple(ps['shape'])} block={ps['block']} "
+              f"total_work={ps['total_work']}/{ps['blocks']} blocks "
+              f"skipped={ps['skipped_fraction']:.0%}")
 
 
 if __name__ == "__main__":

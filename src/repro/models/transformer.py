@@ -123,15 +123,19 @@ def mlp_fwd(params, cfg: ModelConfig, x, taps: dict | None = None, mesh=None, rt
     mesh = mesh if mesh is not None else rt.mesh
     if cfg.mlp_gated:
         if rt.wants_sparse and cfg.activation == "relu":
-            # TensorDash fused + emitted-plan path (v2): the gate matmul
-            # applies ReLU in its store step and emits its output's
-            # block-nonzero mask.  Gating is a pointwise product, so a block
-            # the gate zeroed stays zero in h — the emitted mask is a valid
+            # TensorDash fused + emitted-plan path: the gate matmul applies
+            # ReLU in its store step and emits its output's block-nonzero
+            # mask.  Gating is a pointwise product, so a block the gate
+            # zeroed stays zero in h — the emitted mask is a valid
             # (conservative) plan for the w_down matmul, which therefore
-            # never re-scans h's values; its compacted grid then skips those
-            # blocks in time.  The runtime clamps block geometry to the
-            # operand shapes, so odd token counts plan at a finer
-            # granularity instead of silently running dense.
+            # never re-scans h's values; the plan's CSR work queue (built in
+            # the same fused replanning dispatch) then lets the v3 ragged
+            # grid skip those blocks in time at per-row granularity — token
+            # rows ReLU zeroed heavily finish early instead of riding
+            # behind the densest row's max(nnz) bound (v2).  The runtime
+            # clamps block geometry to the operand shapes, so odd token
+            # counts plan at a finer granularity instead of silently
+            # running dense.
             lead = x.shape[:-1]
             x2 = x.reshape(-1, x.shape[-1])
             g, gmask = rt.matmul_fused(
@@ -164,10 +168,14 @@ def head_matmul(cfg: ModelConfig, h, lm_head):
     hoists it out of the scan, so it is still computed once per call, not
     per token.
 
-    Execution lands on the v2 compacted-grid kernel: the contraction grid
-    of the decode-path LM-head matmul is bounded by the head plan's
-    ``max(nnz)``, so a block-pruned head's skipped columns cost zero grid
-    steps per token — decode LM-head time scales with head density.
+    Execution lands on the v3 ragged work-queue kernel (the runtime
+    default): the decode-path LM-head matmul issues exactly one grid step
+    per effectual block — ``sum(nnz)``, not ``Mb * max(nnz)`` — so a
+    block-pruned head with *uneven* per-row pruning (the realistic case)
+    still decodes at its true density; under ``compact_grid=True`` (v2) a
+    single dense vocabulary row would drag every row back to dense cost.
+    The cached plan carries its CSR work queue, so decode steps hand the
+    kernel a precomputed schedule with zero planning dispatches.
     """
     del cfg
     rt = rtm.resolve()

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.tensordash_spmm import plan_from_mask, transpose_plan
+from repro.kernels.tensordash_spmm import plan_from_mask_csr, transpose_plan_csr
 from repro.runtime.plan import PlanCache, SparsityPlan
 
 __all__ = [
@@ -62,6 +62,9 @@ class PlannedVJP:
     products (same registry; defaults to the primal's).  ``cache``/``key``
     opt the backward's plans into a :class:`PlanCache` (hashed by identity —
     two contexts sharing a cache compare equal only on the same cache).
+    ``compact_grid`` is the grid family (v3 ``"ragged"`` / v2 ``True`` / v1
+    ``False``) every product of this matmul — forward and both backward —
+    executes under; all three are bit-identical, only issued steps differ.
     """
 
     backend: str
@@ -72,17 +75,26 @@ class PlannedVJP:
     grad_backend: str | None = None
     cache: PlanCache | None = None
     key: Any = None
+    compact_grid: Any = "ragged"
 
     @property
     def bwd_backend(self) -> str:
         return self.grad_backend or self.backend
 
-    def _execute(self, name, nnz, idx, a, b, *, bm, bk, bn, out_dtype):
+    def _execute(self, name, nnz, idx, a, b, *, bm, bk, bn, out_dtype,
+                 workqueue=None):
         from repro.runtime.backends import get_backend  # local: import cycle
 
         return get_backend(name).execute_planned(
-            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
+            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+            compact_grid=self.compact_grid, workqueue=workqueue,
         )
+
+    def _plan_workqueue(self, plan: SparsityPlan):
+        """The plan's CSR triple when the ragged grid will consume it (and
+        the plan carries one), else ``None`` — the kernel derives it
+        in-graph for traced plans."""
+        return plan.workqueue() if self.compact_grid == "ragged" else None
 
 
 def _is_traced(x) -> bool:
@@ -118,10 +130,11 @@ def _lhs_t_plan(ctx: PlannedVJP, nnz, idx, a) -> SparsityPlan:
                 return hit
         else:
             cache.traced += 1
-    nnz_t, idx_t = transpose_plan(nnz, idx)
+    nnz_t, idx_t, row_starts, work_row, work_kblk = transpose_plan_csr(nnz, idx)
     plan = SparsityPlan(
         nnz=nnz_t, idx=idx_t, bm=ctx.bk, bk=ctx.bm,
         shape=(a.shape[1], a.shape[0]), dtype=a.dtype,
+        row_starts=row_starts, work_row=work_row, work_kblk=work_kblk,
     )
     if cache is not None and concrete:
         cache.store(key, idx, plan)
@@ -142,11 +155,13 @@ def planned_matmul_grads(ctx: PlannedVJP, nnz, idx, a, b, g):
     da = ctx._execute(
         ctx.bwd_backend, pg.nnz, pg.idx, g32, b.astype(jnp.float32).T,
         bm=ctx.bm, bk=ctx.bn, bn=ctx.bk, out_dtype=a.dtype,
+        workqueue=ctx._plan_workqueue(pg),
     )
     pt = _lhs_t_plan(ctx, nnz, idx, a)
     db = ctx._execute(
         ctx.bwd_backend, pt.nnz, pt.idx, a.astype(jnp.float32).T, g32,
         bm=ctx.bk, bk=ctx.bm, bn=ctx.bn, out_dtype=b.dtype,
+        workqueue=ctx._plan_workqueue(pt),
     )
     return da, db
 
@@ -228,13 +243,15 @@ class FusedVJP(PlannedVJP):
 
 def _mask_plan(ctx: FusedVJP, mask) -> SparsityPlan:
     """Plan the cotangent stream from the forward's emitted output mask —
-    metadata only, no pass over gradient values.  The mask granularity
-    ``(bm, bn)`` is exactly the cotangent's blocking for Eq. 2."""
-    nnz_g, idx_g = plan_from_mask(mask)
+    metadata only, no pass over gradient values (the v3 work queue rides
+    along in the same fused dispatch).  The mask granularity ``(bm, bn)``
+    is exactly the cotangent's blocking for Eq. 2."""
+    nnz_g, idx_g, row_starts, work_row, work_kblk = plan_from_mask_csr(mask)
     mb, nb = mask.shape
     return SparsityPlan(
         nnz=nnz_g, idx=idx_g, bm=ctx.bm, bk=ctx.bn,
         shape=(mb * ctx.bm, nb * ctx.bn), dtype=jnp.float32,
+        row_starts=row_starts, work_row=work_row, work_kblk=work_kblk,
     )
 
 
@@ -250,6 +267,7 @@ def fused_planned_matmul(ctx: FusedVJP, nnz, idx, a, b, bias, residual):
         nnz, idx, a, b, bias, residual,
         bm=ctx.bm, bk=ctx.bk, bn=ctx.bn,
         activation=ctx.activation, out_dtype=ctx.out_dtype,
+        compact_grid=ctx.compact_grid,
     )
 
 
@@ -291,6 +309,7 @@ def _fused_bwd(ctx: FusedVJP, res, cots):
     da = ctx._execute(
         ctx.bwd_backend, pg.nnz, pg.idx, g_pre, b.astype(jnp.float32).T,
         bm=ctx.bm, bk=ctx.bn, bn=ctx.bk, out_dtype=a.dtype,
+        workqueue=ctx._plan_workqueue(pg),
     )
     # Eq. 3 (A*G): db = a.T @ g_pre, planned by metadata transpose of the
     # forward plan (shared with the unfused rule).
@@ -298,6 +317,7 @@ def _fused_bwd(ctx: FusedVJP, res, cots):
     db = ctx._execute(
         ctx.bwd_backend, pt.nnz, pt.idx, a.astype(jnp.float32).T, g_pre,
         bm=ctx.bk, bk=ctx.bm, bn=ctx.bn, out_dtype=b.dtype,
+        workqueue=ctx._plan_workqueue(pt),
     )
     zero = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int plan metadata
     dbias = None if bias is None else jnp.sum(g_pre, axis=0).astype(bias.dtype)

@@ -94,49 +94,64 @@ class KernelBackend:
         """
         raise NotImplementedError
 
-    def execute_planned(self, nnz, idx, a, b, *, bm: int, bk: int, bn: int, out_dtype=None):
+    def execute_planned(self, nnz, idx, a, b, *, bm: int, bk: int, bn: int,
+                        out_dtype=None, compact_grid="ragged", workqueue=None):
         """Primal-only planned ``a @ b`` (no differentiation rule).
 
         This is the raw executor the registry routes — both the forward and
         the two backward products of :func:`repro.runtime.autodiff.planned_matmul`
-        land here.
+        land here.  ``compact_grid`` selects the grid family (``"ragged"``
+        v3 work queue / ``True`` v2 ``max(nnz)`` bound / ``False`` v1 full
+        gated grid) and ``workqueue`` optionally carries the plan's CSR
+        triple; executors that model time rather than steps (dense,
+        reference) execute the identical per-row schedule regardless, so
+        every mode is bit-identical across backends.
         """
         raise NotImplementedError
 
     def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm: int, bk: int,
-                      bn: int, activation: str = "none", out_dtype=None):
+                      bn: int, activation: str = "none", out_dtype=None,
+                      compact_grid="ragged", workqueue=None):
         """Primal-only planned fused ``act(a @ b + bias) + residual``.
 
         Returns ``(out, mask)`` where ``mask`` is the emitted ``int8
         [Mb, Nb]`` output block-nonzero map (the §3.7 backside scheduler's
         product).  No differentiation rule — the raw executor
         :func:`repro.runtime.autodiff.fused_planned_matmul` routes here.
+        ``compact_grid``/``workqueue`` as in :meth:`execute_planned`.
         """
         raise NotImplementedError
 
     def matmul_planned(self, plan: SparsityPlan, a, b, *, bn: int, out_dtype=None,
-                       plan_cache=None, plan_key=None, grad_backend=None):
+                       plan_cache=None, plan_key=None, grad_backend=None,
+                       compact_grid="ragged"):
         """Planned ``a @ b`` with the sparsity-aware VJP.
 
         Training through any backend routes *both* gradient products (paper
         Eq. 2-3) back through this registry with their own ``SparsityPlan``s;
         ``plan_cache``/``plan_key`` let eager backward executions reuse the
-        transposed-weight plan across microbatches.
+        transposed-weight plan across microbatches.  Under ``"ragged"`` the
+        plan's cached work queue is handed straight to the kernel on the
+        concrete (eager/serving) path; traced calls derive it in-graph, where
+        XLA hoists loop-invariant plans.
         """
         if _all_concrete(plan.nnz, plan.idx, a, b):
             return self.execute_planned(
                 plan.nnz, plan.idx, a, b, bm=plan.bm, bk=plan.bk, bn=bn,
-                out_dtype=out_dtype,
+                out_dtype=out_dtype, compact_grid=compact_grid,
+                workqueue=plan.workqueue() if compact_grid == "ragged" else None,
             )
         ctx = PlannedVJP(
             backend=self.name, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
             grad_backend=grad_backend, cache=plan_cache, key=plan_key,
+            compact_grid=compact_grid,
         )
         return planned_matmul(ctx, plan.nnz, plan.idx, a, b)
 
     def matmul_fused(self, plan: SparsityPlan, a, b, *, bias=None, residual=None,
                      activation: str = "none", bn: int, out_dtype=None,
-                     plan_cache=None, plan_key=None, grad_backend=None):
+                     plan_cache=None, plan_key=None, grad_backend=None,
+                     compact_grid="ragged"):
         """Planned fused ``act(a @ b + bias) + residual`` with the
         sparsity-aware VJP; returns ``(out, mask)``.
 
@@ -148,12 +163,13 @@ class KernelBackend:
             return self.execute_fused(
                 plan.nnz, plan.idx, a, b, bias, residual,
                 bm=plan.bm, bk=plan.bk, bn=bn, activation=activation,
-                out_dtype=out_dtype,
+                out_dtype=out_dtype, compact_grid=compact_grid,
+                workqueue=plan.workqueue() if compact_grid == "ragged" else None,
             )
         ctx = FusedVJP(
             backend=self.name, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
             grad_backend=grad_backend, cache=plan_cache, key=plan_key,
-            activation=activation,
+            activation=activation, compact_grid=compact_grid,
         )
         return fused_planned_matmul(ctx, plan.nnz, plan.idx, a, b, bias, residual)
 
@@ -176,13 +192,19 @@ class DenseBackend(KernelBackend):
         out = ref.matmul_ref(a, b)
         return out.astype(out_dtype) if out_dtype else out
 
-    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None):
+    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None,
+                        compact_grid="ragged", workqueue=None):
+        # the reference executor walks the identical per-row schedule for
+        # every grid family — compaction only changes *when* work is issued
+        del compact_grid, workqueue
         return ref.tensordash_matmul_ref(
             nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
         )
 
     def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm, bk, bn,
-                      activation="none", out_dtype=None):
+                      activation="none", out_dtype=None, compact_grid="ragged",
+                      workqueue=None):
+        del compact_grid, workqueue
         return ref.tensordash_matmul_fused_ref(
             nnz, idx, a, b, bias, residual, bm=bm, bk=bk, bn=bn,
             activation=activation, out_dtype=out_dtype,
@@ -199,13 +221,17 @@ class ReferenceBackend(KernelBackend):
         plan = plan_operand(a, bm, bk)
         return self.matmul_planned(plan, a, b, bn=bn, out_dtype=out_dtype)
 
-    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None):
+    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None,
+                        compact_grid="ragged", workqueue=None):
+        del compact_grid, workqueue  # same schedule either way (see dense)
         return ref.tensordash_matmul_ref(
             nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
         )
 
     def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm, bk, bn,
-                      activation="none", out_dtype=None):
+                      activation="none", out_dtype=None, compact_grid="ragged",
+                      workqueue=None):
+        del compact_grid, workqueue
         return ref.tensordash_matmul_fused_ref(
             nnz, idx, a, b, bias, residual, bm=bm, bk=bk, bn=bn,
             activation=activation, out_dtype=out_dtype,
@@ -232,19 +258,22 @@ class PallasBackend(KernelBackend):
         plan = plan_operand(a, bm, bk)
         return self.matmul_planned(plan, a, b, bn=bn, out_dtype=out_dtype)
 
-    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None):
+    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None,
+                        compact_grid="ragged", workqueue=None):
         self.check_platform()
         return tensordash_matmul_planned(
             nnz, idx, a, b, bm=bm, bk=bk, bn=bn, interpret=self.interpret,
-            out_dtype=out_dtype,
+            out_dtype=out_dtype, compact_grid=compact_grid, workqueue=workqueue,
         )
 
     def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm, bk, bn,
-                      activation="none", out_dtype=None):
+                      activation="none", out_dtype=None, compact_grid="ragged",
+                      workqueue=None):
         self.check_platform()
         return tensordash_matmul_fused(
             nnz, idx, a, b, bias, residual, activation=activation,
             bm=bm, bk=bk, bn=bn, interpret=self.interpret, out_dtype=out_dtype,
+            compact_grid=compact_grid, workqueue=workqueue,
         )
 
 

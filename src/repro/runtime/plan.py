@@ -23,7 +23,7 @@ import dataclasses
 from typing import Any
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "SparsityPlan",
@@ -42,6 +42,13 @@ class SparsityPlan:
     block-row ``r`` of the planned operand; the tail repeats the last
     effectual index so skipped grid steps revisit a resident block.
 
+    ``row_starts`` / ``work_row`` / ``work_kblk`` are the CSR-style v3 work
+    queue (``repro.kernels.tensordash_spmm.plan_workqueue``): the same
+    schedule flattened to one entry per effectual block, which the ragged
+    kernel walks as a ``(Nb, total_work)`` grid.  Plans built by the
+    planning entry points carry the queue from birth (one fused dispatch);
+    hand-rolled plans get it lazily via :meth:`workqueue`.
+
     ``side`` records which matmul operand the plan describes: ``"A"`` plans
     the left operand ``a [M, K]`` with ``(bm, bk)`` blocks; ``"B"`` plans
     the *transposed* right operand ``b.T [N, K]`` (weight sparsity), so the
@@ -55,6 +62,15 @@ class SparsityPlan:
     shape: tuple[int, int]  # shape of the planned operand (post-transpose for B)
     dtype: Any
     side: str = "A"
+    row_starts: Any = None  # [Rb+1] int32 CSR offsets (v3 work queue)
+    work_row: Any = None  # [Rb*Kb] int32 block row per work item
+    work_kblk: Any = None  # [Rb*Kb] int32 K block per work item
+    #: host-side stat cache (max/sum of nnz etc.) — populated on first use,
+    #: excluded from equality/repr; one device fetch amortized over every
+    #: report/benchmark query on this plan
+    _host: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False
+    )
 
     @property
     def block_rows(self) -> int:
@@ -68,9 +84,61 @@ class SparsityPlan:
     def total_blocks(self) -> int:
         return self.block_rows * self.k_blocks
 
+    def workqueue(self):
+        """The ``(row_starts, work_row, work_kblk)`` triple, deriving (and
+        memoizing, for concrete plans) it when the plan was built without
+        one.  A pure metadata transform either way — never a values pass."""
+        if self.row_starts is None:
+            from repro.kernels.tensordash_spmm import plan_workqueue  # local: keep import light
+
+            rs, wr, wk = plan_workqueue(self.nnz, self.idx)
+            if not isinstance(rs, jax.core.Tracer):
+                # frozen dataclass: memoize via object.__setattr__ (plans
+                # under trace are per-trace objects; don't pin tracers)
+                object.__setattr__(self, "row_starts", rs)
+                object.__setattr__(self, "work_row", wr)
+                object.__setattr__(self, "work_kblk", wk)
+            return rs, wr, wk
+        return self.row_starts, self.work_row, self.work_kblk
+
+    def host_nnz(self):
+        """``nnz`` as a cached host-side numpy array (concrete plans only).
+
+        Every stat below derives from this one fetch; under tracing the
+        counts are symbolic and fetching would silently block mid-trace, so
+        raise a clear error instead.
+        """
+        if "nnz" not in self._host:
+            if isinstance(self.nnz, jax.core.Tracer):
+                raise TypeError(
+                    "plan stats need a concrete plan: nnz is a tracer "
+                    "(inside jit/grad/scan) — query stats outside the "
+                    "traced region"
+                )
+            self._host["nnz"] = np.asarray(self.nnz)
+        return self._host["nnz"]
+
     def effectual_blocks(self) -> int:
         """Number of not-all-zero blocks (concrete plans only)."""
-        return int(jnp.sum(self.nnz))
+        return int(self.host_nnz().sum())
+
+    def total_work(self) -> int:
+        """v3 ragged-grid steps per N block: ``sum(max(nnz, 1))`` — the
+        effectual blocks plus one gated zero-fill step per all-zero row."""
+        return int(np.maximum(self.host_nnz(), 1).sum())
+
+    def max_nnz(self) -> int:
+        """The v2 grid's per-row K bound, ``max(nnz, 1)``."""
+        return max(int(self.host_nnz().max(initial=0)), 1)
+
+    def grid_steps(self, nb: int, *, compact_grid="ragged") -> int:
+        """Grid steps the planned kernel issues against ``nb`` output-column
+        blocks, from cached host-side stats (no device sync after the first
+        query; concrete plans only — tracers raise via :meth:`host_nnz`)."""
+        if compact_grid == "ragged":
+            return nb * self.total_work()
+        kdim = self.max_nnz() if compact_grid else self.k_blocks
+        return self.block_rows * nb * kdim
 
     def density(self) -> float:
         """Fraction of blocks that carry effectual work."""
@@ -86,20 +154,26 @@ class SparsityPlan:
             "side": self.side,
             "blocks": self.total_blocks,
             "effectual": self.effectual_blocks(),
+            "total_work": self.total_work(),
             "density": self.density(),
         }
 
 
 def plan_operand(a, bm: int, bk: int, *, side: str = "A") -> SparsityPlan:
-    """Plan a 2-D operand (already transposed for ``side="B"``)."""
-    from repro.kernels.tensordash_spmm import plan_blocks  # local: keep import light
+    """Plan a 2-D operand (already transposed for ``side="B"``).
+
+    One fused dispatch builds the whole payload — compacted ``(nnz, idx)``
+    plus the v3 work queue — so ragged execution never pays a second
+    planning pass."""
+    from repro.kernels.tensordash_spmm import plan_blocks_csr  # local: keep import light
 
     m, k = a.shape
     if m % bm or k % bk:
         raise ValueError(f"operand {a.shape} not divisible by block ({bm}, {bk})")
-    nnz, idx = plan_blocks(a, bm, bk)
+    nnz, idx, row_starts, work_row, work_kblk = plan_blocks_csr(a, bm, bk)
     return SparsityPlan(
-        nnz=nnz, idx=idx, bm=bm, bk=bk, shape=(m, k), dtype=a.dtype, side=side
+        nnz=nnz, idx=idx, bm=bm, bk=bk, shape=(m, k), dtype=a.dtype, side=side,
+        row_starts=row_starts, work_row=work_row, work_kblk=work_kblk,
     )
 
 
@@ -114,32 +188,38 @@ def plan_from_emitted_mask(mask, shape, dtype, *, bm: int, mask_bn: int,
     adjacent mask columns are coarsened (a coarse block is effectual iff any
     member is); otherwise the plan keeps the emitted ``mask_bn`` granularity
     — finer blocks, identical numerics.
+
+    The v3 work queue rides along in the same fused dispatch, so emitted-mask
+    replanning stays one program and the same allocation pattern as v2 —
+    the producer hands its consumer the *ragged* schedule for free.
     """
-    from repro.kernels.tensordash_spmm import plan_from_mask  # local: keep import light
+    from repro.kernels.tensordash_spmm import plan_from_mask_csr  # local: keep import light
 
     coarsen = 1
     plan_bk = mask_bn
     if bk is not None and bk != mask_bn:
         if bk % mask_bn == 0 and shape[1] % bk == 0:
             coarsen, plan_bk = bk // mask_bn, bk
-    nnz, idx = plan_from_mask(mask, coarsen=coarsen)
+    nnz, idx, row_starts, work_row, work_kblk = plan_from_mask_csr(mask, coarsen=coarsen)
     return SparsityPlan(
-        nnz=nnz, idx=idx, bm=bm, bk=plan_bk, shape=tuple(shape), dtype=dtype
+        nnz=nnz, idx=idx, bm=bm, bk=plan_bk, shape=tuple(shape), dtype=dtype,
+        row_starts=row_starts, work_row=work_row, work_kblk=work_kblk,
     )
 
 
 def dense_operand_plan(shape, dtype, *, bm: int, bk: int, side: str = "A") -> SparsityPlan:
     """The trivial all-effectual plan for a known-dense operand — metadata
-    only (``nnz = Kb``, ``idx = arange``), skipping the values pass a
-    :func:`plan_operand` call would make."""
-    from repro.kernels.tensordash_spmm import dense_plan  # local: keep import light
+    only (``nnz = Kb``, ``idx = arange``, closed-form work queue), skipping
+    the values pass a :func:`plan_operand` call would make."""
+    from repro.kernels.tensordash_spmm import dense_plan_csr  # local: keep import light
 
     m, k = shape
     if m % bm or k % bk:
         raise ValueError(f"operand {shape} not divisible by block ({bm}, {bk})")
-    nnz, idx = dense_plan(m // bm, k // bk)
+    nnz, idx, row_starts, work_row, work_kblk = dense_plan_csr(m // bm, k // bk)
     return SparsityPlan(
-        nnz=nnz, idx=idx, bm=bm, bk=bk, shape=(m, k), dtype=dtype, side=side
+        nnz=nnz, idx=idx, bm=bm, bk=bk, shape=(m, k), dtype=dtype, side=side,
+        row_starts=row_starts, work_row=work_row, work_kblk=work_kblk,
     )
 
 
@@ -216,6 +296,29 @@ class PlanCache:
             "misses": self.misses,
             "traced": self.traced,
         }
+
+    def plan_stats(self) -> list[dict]:
+        """Per-plan work summary for every live entry (LRU order, coldest
+        first): the v3 ragged-grid ``total_work`` and the skipped fraction,
+        so production traces can observe per-operand *skew*, not just hit
+        rates.  Cached entries are always concrete, so the host-side stats
+        never sync mid-trace."""
+        out = []
+        for (key, side, *_rest), (_, plan) in self._entries.items():
+            # shape/block come from the plan itself: identity-anchored
+            # backward entries (autodiff's transposed-plan cache) key on the
+            # idx metadata array, whose shape is the block grid, not the
+            # operand
+            out.append({
+                "key": key,
+                "side": side,
+                "shape": plan.shape,
+                "block": (plan.bm, plan.bk),
+                "blocks": plan.total_blocks,
+                "total_work": plan.total_work(),
+                "skipped_fraction": plan.skipped_fraction(),
+            })
+        return out
 
     def clear(self) -> None:
         self._entries.clear()

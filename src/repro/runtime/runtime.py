@@ -72,12 +72,20 @@ class Runtime:
     TPU MXU; tests shrink them).  ``plan_cache`` is carried by handle so a
     serving engine's plans survive across steps; it is excluded from
     equality so two runtimes with the same policy compare equal.
+
+    ``compact_grid`` picks the kernel grid family — bit-identical outputs,
+    different issued work: ``"ragged"`` (default, v3) walks the plan's CSR
+    work queue so steps equal effectual blocks exactly (``O(sum(nnz))``,
+    skew-immune); ``True`` (v2) bounds the K grid by the per-call
+    ``max(nnz)`` (one dense row drags all rows to dense cost); ``False``
+    (v1) issues the full gated grid — kept for A/B measurement.
     """
 
     backend: str = "dense"
     bm: int = 128
     bk: int = 512
     bn: int = 128
+    compact_grid: Any = "ragged"
     mesh: Any = None
     plan_cache: PlanCache = dataclasses.field(
         default_factory=PlanCache, compare=False, repr=False
@@ -89,6 +97,13 @@ class Runtime:
     accum_dtype: Any = jnp.float32
 
     # -- construction ------------------------------------------------------
+    def __post_init__(self):
+        from repro.kernels.tensordash_spmm import _check_compact_grid
+
+        # fail at construction, not at the first kernel call deep in a
+        # model: a typo'd mode string would otherwise silently select v2
+        _check_compact_grid(self.compact_grid)
+
     def replace(self, **kw) -> "Runtime":
         return dataclasses.replace(self, **kw)
 
@@ -190,6 +205,7 @@ class Runtime:
             out_t = kernel.matmul_planned(
                 plan, b.T, a.T, bn=_fit_block(rt.bm, a.shape[0]), out_dtype=a.dtype,
                 plan_cache=self.plan_cache, plan_key=("B", plan_key),
+                compact_grid=self.compact_grid,
             )
             return out_t.T
         if plan is None:
@@ -204,6 +220,7 @@ class Runtime:
         return kernel.matmul_planned(
             plan, a, b, bn=_fit_block(rt.bn, b.shape[1]), out_dtype=a.dtype,
             plan_cache=self.plan_cache, plan_key=("A", plan_key),
+            compact_grid=self.compact_grid,
         )
 
     def matmul_fused(self, a, b, *, bias=None, residual=None,
@@ -226,10 +243,12 @@ class Runtime:
         a, b = self._dtype_prologue(a, b)
         kernel = self.kernel
         rt = self if plan is not None else self.fit(a.shape, b.shape)
-        if not kernel.sparse and plan is None:
-            # dense shortcut (mirrors matmul's): one XLA dot + the shared
-            # fp32 epilogue; the mask is a blockwise any at the geometry
-            # the planned path would emit
+        if not kernel.sparse and plan is None and plan_key is None:
+            # dense shortcut (mirrors matmul's, including the plan_key
+            # condition: a keyed call routes through the planned path so the
+            # plan cache stays populated/observable even on a dense dry-run):
+            # one XLA dot + the shared fp32 epilogue; the mask is a blockwise
+            # any at the geometry the planned path would emit
             from repro.kernels.ref import _epilogue_ref  # local: keep import light
 
             out32 = _epilogue_ref(
@@ -252,6 +271,7 @@ class Runtime:
             plan, a, b, bias=bias, residual=residual, activation=activation,
             bn=_fit_block(rt.bn, b.shape[1]), out_dtype=a.dtype,
             plan_cache=self.plan_cache, plan_key=("A", plan_key),
+            compact_grid=self.compact_grid,
         )
 
     def plan_for_fused_output(self, mask, h, w) -> SparsityPlan:
@@ -289,6 +309,7 @@ class Runtime:
             backend=self.backend, bm=plan.bm, bk=plan.bk,
             bn=_fit_block(self.bn, g.shape[1]),
             cache=self.plan_cache, key=("A", plan_key),
+            compact_grid=self.compact_grid,
         )
         return planned_matmul_grads(ctx, plan.nnz, plan.idx, a, b, g)
 

@@ -34,11 +34,16 @@ later prefill (identity-validated hits), and inside the jitted decode scan
 it is part of the traced program — XLA hoists the scan-invariant weight
 plan out of the loop, so it is computed once per chunk call, not per token
 (observable via ``rt.plan_cache.stats()["traced"]``).  Execution goes
-through the v2 compacted-grid kernel: each decode step's LM-head matmul
-issues ``max(nnz)`` contraction grid steps instead of the full ``Kb``, so a
+through the v3 ragged work-queue kernel (the runtime default): each decode
+step's LM-head matmul issues exactly ``sum(nnz)`` contraction grid steps —
+one per effectual block — instead of the full ``Kb`` per row, so a
 block-pruned head's elided columns buy wall-clock on every token of every
-slot, not just power.  The engine's plan cache is LRU — sustained serving
-with more live weights than capacity keeps the hottest plans resident.
+slot even when the pruning is skewed across rows (under the v2
+``compact_grid=True`` bound a single dense vocabulary row would drag every
+row back to dense cost).  The engine's plan cache is LRU — sustained
+serving with more live weights than capacity keeps the hottest plans
+resident — and ``launch/serve.py`` prints each cached plan's
+``total_work`` / skipped fraction so that skew is visible in traces.
 
 RNG: every request's sampling stream is ``fold_in(PRNGKey(seed), rid)``,
 split before first use and advanced per emitted token — so sampled output

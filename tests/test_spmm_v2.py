@@ -85,7 +85,7 @@ def test_compact_vs_gated_grid_bit_identical():
     b = jnp.asarray(rng.standard_normal((128, 32)).astype(np.float32))
     nnz, idx = plan_blocks(a, 16, 32)
     kw = dict(bm=16, bk=32, bn=16, interpret=True)
-    v2 = tensordash_matmul_planned(nnz, idx, a, b, **kw)
+    v2 = tensordash_matmul_planned(nnz, idx, a, b, compact_grid=True, **kw)
     v1 = tensordash_matmul_planned(nnz, idx, a, b, compact_grid=False, **kw)
     np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
 
@@ -102,10 +102,13 @@ def test_grid_steps_scale_with_density():
     a = rng.standard_normal((m, k)).astype(np.float32)
     a = jnp.asarray((a.reshape(mb, bm, kb, bk) * mask[:, None, :, None]).reshape(m, k))
     nnz, idx = plan_blocks(a, bm, bk)
-    v2 = planned_grid_steps(nnz, kb, mb, 4)
+    v3 = planned_grid_steps(nnz, kb, mb, 4)  # default: the v3 ragged queue
+    v2 = planned_grid_steps(nnz, kb, mb, 4, compact_grid=True)
     v1 = planned_grid_steps(nnz, kb, mb, 4, compact_grid=False)
     assert v1 == mb * 4 * kb
     assert v2 * 2 == v1
+    # uniform rows: ragged total work equals the v2 bound exactly
+    assert v3 == v2 == 4 * int(np.asarray(nnz).sum())
 
 
 # ---------------------------------------------------------------------------

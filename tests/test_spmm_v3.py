@@ -1,0 +1,389 @@
+"""v3 kernel family: the ragged CSR-style work-queue grid.
+
+Covers the ISSUE-5 acceptance surface: v3 == v2 == dense bitwise across
+skewed / uniform / all-zero / all-dense row distributions x {fp32, bf16} x
+{interpret, reference}; the work-queue metadata transform vs a loopy numpy
+oracle (including transposed, emitted-mask and dense plans); fused-epilogue
+and emitted-mask parity on the ragged grid; VJP gradients vs dense math;
+grid-step accounting (steps == sum(max(nnz, 1)) exactly, skew-immune) and
+the `planned_grid_steps` tracer guard.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import plan_workqueue_ref, tensordash_matmul_fused_ref
+from repro.kernels.tensordash_spmm import (
+    dense_plan_csr,
+    plan_blocks,
+    plan_blocks_csr,
+    plan_from_mask_csr,
+    plan_workqueue,
+    planned_grid_steps,
+    tensordash_matmul_fused,
+    tensordash_matmul_planned,
+    transpose_plan,
+    transpose_plan_csr,
+)
+from repro.runtime import Runtime, dense_operand_plan, plan_operand
+
+# per-block-row nnz profiles over kb K blocks, by skew shape
+DISTRIBUTIONS = {
+    "skewed": lambda kb, mb, rng: np.minimum(
+        kb, np.maximum(1, (kb / 2 ** np.arange(mb)).astype(np.int64))
+    ),
+    "uniform": lambda kb, mb, rng: np.full(mb, kb // 2, np.int64),
+    "all_zero": lambda kb, mb, rng: np.zeros(mb, np.int64),
+    "all_dense": lambda kb, mb, rng: np.full(mb, kb, np.int64),
+    "mixed": lambda kb, mb, rng: rng.integers(0, kb + 1, size=mb),
+}
+
+
+def _operand_with_row_nnz(rng, m, k, bm, bk, row_nnz):
+    """Block-sparse operand whose block row r keeps exactly row_nnz[r]
+    random effectual K blocks."""
+    mb, kb = m // bm, k // bk
+    mask = np.zeros((mb, kb), bool)
+    for r in range(mb):
+        if row_nnz[r]:
+            mask[r, rng.choice(kb, int(row_nnz[r]), replace=False)] = True
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    return (a.reshape(mb, bm, kb, bk) * mask[:, None, :, None]).reshape(m, k)
+
+
+# ---------------------------------------------------------------------------
+# work-queue metadata
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_plan_workqueue_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    mb, kb = int(rng.integers(1, 9)), int(rng.integers(1, 17))
+    mask = rng.random((mb, kb)) < rng.random()
+    a = rng.standard_normal((mb * 4, kb * 8)).astype(np.float32)
+    a = (a.reshape(mb, 4, kb, 8) * mask[:, None, :, None]).reshape(mb * 4, kb * 8)
+    nnz, idx = plan_blocks(jnp.asarray(a), 4, 8)
+    rs, wr, wk = plan_workqueue(nnz, idx)
+    rs_r, wr_r, wk_r = plan_workqueue_ref(np.asarray(nnz), np.asarray(idx))
+    total = int(rs_r[-1])
+    np.testing.assert_array_equal(np.asarray(rs), rs_r)
+    # the tail past total_work is never visited by the grid: compare the
+    # live prefix only
+    np.testing.assert_array_equal(np.asarray(wr)[:total], wr_r[:total])
+    np.testing.assert_array_equal(np.asarray(wk)[:total], wk_r[:total])
+
+
+def test_workqueue_structure_properties():
+    """row_starts is monotone with unit-minimum runs; every queue item of a
+    live row is one of its effectual blocks in ascending plan order."""
+    rng = np.random.default_rng(3)
+    row_nnz = [4, 0, 1, 3, 0, 2, 4, 4]
+    a = _operand_with_row_nnz(rng, 64, 128, 8, 32, row_nnz)
+    nnz, idx, rs, wr, wk = plan_blocks_csr(jnp.asarray(a), 8, 32)
+    rs, wr, wk = np.asarray(rs), np.asarray(wr), np.asarray(wk)
+    nnz, idx = np.asarray(nnz), np.asarray(idx)
+    np.testing.assert_array_equal(nnz, row_nnz)
+    runs = np.diff(rs)
+    np.testing.assert_array_equal(runs, np.maximum(nnz, 1))
+    assert rs[0] == 0 and rs[-1] == np.maximum(nnz, 1).sum()
+    for m in range(len(row_nnz)):
+        seg = slice(rs[m], rs[m + 1])
+        assert (wr[seg] == m).all()
+        np.testing.assert_array_equal(wk[seg], idx[m, : runs[m]])
+
+
+def test_plan_variants_carry_consistent_workqueues():
+    """plan_blocks_csr / transpose_plan_csr / plan_from_mask_csr / dense_plan_csr
+    all agree with plan_workqueue applied to their own (nnz, idx)."""
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(_operand_with_row_nnz(rng, 64, 128, 16, 32, [4, 1, 0, 2]))
+    nnz, idx, rs, wr, wk = plan_blocks_csr(a, 16, 32)
+    rs2, wr2, wk2 = plan_workqueue(nnz, idx)
+    for got, want in zip((rs, wr, wk), (rs2, wr2, wk2)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    nnz_t, idx_t, rs_t, wr_t, wk_t = transpose_plan_csr(nnz, idx)
+    nnz_t2, idx_t2 = transpose_plan(nnz, idx)
+    np.testing.assert_array_equal(np.asarray(nnz_t), np.asarray(nnz_t2))
+    np.testing.assert_array_equal(np.asarray(idx_t), np.asarray(idx_t2))
+    for got, want in zip((rs_t, wr_t, wk_t), plan_workqueue(nnz_t, idx_t)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    mask = jnp.asarray((np.asarray(nnz) > 0).astype(np.int8)[:, None] *
+                       np.ones((1, 4), np.int8))
+    nnz_m, idx_m, rs_m, wr_m, wk_m = plan_from_mask_csr(mask)
+    for got, want in zip((rs_m, wr_m, wk_m), plan_workqueue(nnz_m, idx_m)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    nnz_d, idx_d, rs_d, wr_d, wk_d = dense_plan_csr(4, 4)
+    rs_r, wr_r, wk_r = plan_workqueue_ref(nnz_d, idx_d)
+    np.testing.assert_array_equal(rs_d, rs_r)
+    np.testing.assert_array_equal(wr_d, wr_r)
+    np.testing.assert_array_equal(wk_d, wk_r)
+
+
+def test_sparsity_plan_carries_and_memoizes_workqueue():
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(_operand_with_row_nnz(rng, 32, 64, 16, 32, [2, 0]))
+    plan = plan_operand(a, 16, 32)
+    assert plan.row_starts is not None  # born with the queue, one dispatch
+    rs, wr, wk = plan.workqueue()
+    assert rs is plan.row_starts
+    # a hand-rolled plan derives lazily and memoizes
+    bare = plan_operand(a, 16, 32)
+    object.__setattr__(bare, "row_starts", None)
+    rs1 = bare.workqueue()[0]
+    assert bare.row_starts is not None
+    assert bare.workqueue()[0] is rs1
+    np.testing.assert_array_equal(np.asarray(rs1), np.asarray(rs))
+    # dense metadata plans carry the closed-form queue
+    dp = dense_operand_plan((32, 64), jnp.float32, bm=16, bk=32)
+    np.testing.assert_array_equal(
+        np.asarray(dp.row_starts), np.arange(3, dtype=np.int32) * 2
+    )
+
+
+# ---------------------------------------------------------------------------
+# ragged grid execution: v3 == v2 == dense, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dist", sorted(DISTRIBUTIONS))
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_bitwise_matches_v2_and_v1(dist, dtype):
+    rng = np.random.default_rng(len(dist))
+    m, k, n, bm, bk, bn = 64, 128, 48, 16, 32, 16
+    row_nnz = DISTRIBUTIONS[dist](k // bk, m // bm, rng)
+    a = jnp.asarray(_operand_with_row_nnz(rng, m, k, bm, bk, row_nnz)).astype(dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32)).astype(dtype)
+    nnz, idx = plan_blocks(a, bm, bk)
+    kw = dict(bm=bm, bk=bk, bn=bn, interpret=True)
+    v3 = tensordash_matmul_planned(nnz, idx, a, b, compact_grid="ragged", **kw)
+    v2 = tensordash_matmul_planned(nnz, idx, a, b, compact_grid=True, **kw)
+    v1 = tensordash_matmul_planned(nnz, idx, a, b, compact_grid=False, **kw)
+    np.testing.assert_array_equal(np.asarray(v3), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(v3), np.asarray(v1))
+
+
+@pytest.mark.parametrize("dist", sorted(DISTRIBUTIONS))
+@pytest.mark.parametrize("backend", ["interpret", "reference"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_runtime_matches_dense_backend_bitwise(dist, backend, dtype):
+    """The full runtime path (plan -> registry -> kernel) under the ragged
+    default equals the schedule-faithful dense executor bit-for-bit."""
+    rng = np.random.default_rng(len(dist) + len(backend))
+    m, k, n, bm, bk, bn = 64, 128, 48, 16, 32, 16
+    row_nnz = DISTRIBUTIONS[dist](k // bk, m // bm, rng)
+    a = jnp.asarray(_operand_with_row_nnz(rng, m, k, bm, bk, row_nnz)).astype(dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32)).astype(dtype)
+    rt = Runtime(backend=backend, bm=bm, bk=bk, bn=bn)
+    assert rt.compact_grid == "ragged"  # the production default
+    out = rt.matmul(a, b)
+    ref = Runtime(backend="dense", bm=bm, bk=bk, bn=bn).matmul(
+        a, b, plan=rt.plan(a)
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_ragged_all_zero_rows_zero_fill():
+    """Every all-zero row owns exactly one gated queue item, so the output
+    still zero-fills (and total_work counts it)."""
+    a = jnp.zeros((32, 64), jnp.float32)
+    nnz, idx = plan_blocks(a, 16, 32)
+    out = tensordash_matmul_planned(
+        nnz, idx, a, jnp.ones((64, 16), jnp.float32), bm=16, bk=32, bn=16,
+        interpret=True, compact_grid="ragged",
+    )
+    assert (np.asarray(out) == 0).all()
+    plan = plan_operand(a, 16, 32)
+    assert plan.total_work() == 2  # one gated step per all-zero block row
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "squared_relu"])
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_ragged_fused_parity(activation, with_bias):
+    """Fused epilogue on the ragged grid: bit-identical output and emitted
+    mask vs the v2 grid and vs the reference executor."""
+    rng = np.random.default_rng(11 + with_bias)
+    m, k, n, bm, bk, bn = 64, 96, 32, 16, 32, 16
+    a = jnp.asarray(_operand_with_row_nnz(rng, m, k, bm, bk, [3, 0, 1, 2]))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal((n,)).astype(np.float32)) if with_bias else None
+    nnz, idx = plan_blocks(a, bm, bk)
+    kw = dict(bm=bm, bk=bk, bn=bn, activation=activation)
+    o3, m3 = tensordash_matmul_fused(
+        nnz, idx, a, b, bias, compact_grid="ragged", interpret=True, **kw
+    )
+    o2, m2 = tensordash_matmul_fused(
+        nnz, idx, a, b, bias, compact_grid=True, interpret=True, **kw
+    )
+    o_r, m_r = tensordash_matmul_fused_ref(nnz, idx, a, b, bias, **kw)
+    np.testing.assert_array_equal(np.asarray(o3), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(o3), np.asarray(o_r))
+    np.testing.assert_array_equal(np.asarray(m3), np.asarray(m2))
+    np.testing.assert_array_equal(np.asarray(m3), np.asarray(m_r))
+
+
+def test_ragged_sparse_ffn_emitted_mask_path():
+    """The fused + emitted-plan FFN rides the ragged grid end to end (the
+    consumer plan's work queue comes from the emitted mask, metadata-only)
+    and matches the dense-backend formulation."""
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((4, 8, 64)).astype(np.float32)
+    w1 = rng.standard_normal((64, 128)).astype(np.float32)
+    w2 = rng.standard_normal((128, 64)).astype(np.float32)
+    for backend in ("interpret", "reference"):
+        rt = Runtime(backend=backend, bm=16, bk=32, bn=16)
+        out = rt.sparse_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2))
+        ref = Runtime(backend="dense", bm=16, bk=32, bn=16).sparse_ffn(
+            jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2)
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4
+        )
+
+
+@pytest.mark.parametrize("backend", ["interpret", "reference"])
+def test_ragged_vjp_matches_dense_grads(backend):
+    """jax.grad through a ragged-grid planned matmul: both gradient products
+    execute on the work-queue grid and match dense math."""
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(_operand_with_row_nnz(rng, 32, 64, 16, 32, [2, 0]))
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    rt = Runtime(backend=backend, bm=16, bk=32, bn=16)
+
+    def loss(a, b):
+        return jnp.sum(jnp.square(rt.matmul(a, b)))
+
+    ga, gb = jax.grad(loss, argnums=(0, 1))(a, b)
+    gd = jax.grad(lambda a, b: jnp.sum(jnp.square(a @ b)), argnums=(0, 1))(a, b)
+    for got, want in zip((ga, gb), gd):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3
+        )
+
+
+def test_ragged_fused_vjp_matches_dense_grads():
+    rng = np.random.default_rng(12)
+    a = jnp.asarray(_operand_with_row_nnz(rng, 32, 64, 16, 32, [2, 1]))
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal((32,)).astype(np.float32))
+    rt = Runtime(backend="interpret", bm=16, bk=32, bn=16)
+
+    def loss_fused(a, b, bias):
+        out, _ = rt.matmul_fused(a, b, bias=bias, activation="relu")
+        return jnp.sum(jnp.square(out))
+
+    def loss_dense(a, b, bias):
+        return jnp.sum(jnp.square(jnp.maximum(a @ b + bias[None, :], 0.0)))
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2))(a, b, bias)
+    gd = jax.grad(loss_dense, argnums=(0, 1, 2))(a, b, bias)
+    for got, want in zip(gf, gd):
+        scale = max(float(jnp.abs(want).max()), 1.0)
+        np.testing.assert_allclose(
+            np.asarray(got) / scale, np.asarray(want) / scale, rtol=2e-3, atol=2e-3
+        )
+
+
+# ---------------------------------------------------------------------------
+# grid-step accounting + the tracer guard
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_grid_steps_are_skew_immune():
+    """The acceptance identity: v3 steps == Nb * sum(nnz) exactly on a
+    skewed workload where v2 pays Nb * Mb * max(nnz)."""
+    rng = np.random.default_rng(0)
+    m, k, bm, bk, nb = 128, 256, 16, 32, 4
+    mb, kb = m // bm, k // bk
+    row_nnz = [8, 8, 6, 4, 2, 2, 1, 1]  # power-law-ish, 50% mean, max dense
+    a = jnp.asarray(_operand_with_row_nnz(rng, m, k, bm, bk, row_nnz))
+    nnz, idx = plan_blocks(a, bm, bk)
+    v3 = planned_grid_steps(nnz, kb, mb, nb, compact_grid="ragged")
+    v2 = planned_grid_steps(nnz, kb, mb, nb, compact_grid=True)
+    assert v3 == nb * sum(row_nnz)  # effectual blocks exactly
+    assert v2 == nb * mb * kb  # one dense row drags v2 to the full grid
+    assert v2 / v3 == 2.0
+    plan = plan_operand(a, bm, bk)
+    assert plan.grid_steps(nb) == v3
+    assert plan.grid_steps(nb, compact_grid=True) == v2
+    assert plan.grid_steps(nb, compact_grid=False) == mb * nb * kb
+    assert plan.total_work() == sum(row_nnz)
+    assert plan.max_nnz() == kb
+
+
+def test_planned_grid_steps_raises_under_tracing():
+    """No silent blocking device sync mid-trace: a traced plan raises a
+    clear error, both from the raw helper and from plan-level stats."""
+    from repro.runtime.plan import SparsityPlan
+
+    a = jnp.asarray(np.random.default_rng(1).standard_normal((32, 64)), jnp.float32)
+
+    @jax.jit
+    def traced_helper(a):
+        nnz, idx = plan_blocks(a, 16, 32)
+        planned_grid_steps(nnz, 2, 2, 1)
+        return nnz
+
+    with pytest.raises(TypeError, match="concrete plan"):
+        traced_helper(a)
+
+    @jax.jit
+    def traced_stats(nnz, idx):
+        plan = SparsityPlan(
+            nnz=nnz, idx=idx, bm=16, bk=32, shape=(32, 64), dtype=jnp.float32
+        )
+        with pytest.raises(TypeError, match="concrete plan"):
+            plan.total_work()
+        return nnz
+
+    concrete = plan_operand(a, 16, 32)
+    traced_stats(concrete.nnz, concrete.idx)
+
+
+def test_compact_grid_mode_is_validated():
+    """A stray truthy mode must fail loudly, not silently run v2."""
+    with pytest.raises(ValueError, match="compact_grid"):
+        Runtime(compact_grid="Ragged")
+    with pytest.raises(ValueError, match="compact_grid"):
+        planned_grid_steps(np.zeros(2, np.int32), 2, 2, 1, compact_grid="raggedy")
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.standard_normal((32, 64)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32))
+    nnz, idx = plan_blocks(a, 16, 32)
+    with pytest.raises(ValueError, match="compact_grid"):
+        tensordash_matmul_planned(
+            nnz, idx, a, b, bm=16, bk=32, bn=16, interpret=True,
+            compact_grid="csr",  # plausible future name, must not run as v2
+        )
+
+
+def test_plan_stats_reports_operand_shape():
+    """plan_stats emits the planned operand's shape/block from the plan
+    itself — identity-anchored backward entries key on the idx array, whose
+    shape is the block grid, not the operand."""
+    from repro.runtime.plan import PlanCache
+
+    rng = np.random.default_rng(8)
+    a = jnp.asarray(_operand_with_row_nnz(rng, 64, 128, 16, 32, [3, 1, 0, 2]))
+    b = jnp.asarray(rng.standard_normal((128, 32)).astype(np.float32))
+    g = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    rt = Runtime(backend="reference", bm=16, bk=32, bn=16)
+    rt.matmul_grads(a, b, g, plan_key="acts")  # caches the (128, 64) a.T plan
+    by_key = {s["key"]: s for s in rt.plan_cache.plan_stats()}
+    lhs_t = by_key[("vjp_lhs_t", ("A", "acts"))]
+    assert lhs_t["shape"] == (128, 64)  # a.T's shape, not idx's (4, 4)
+    assert lhs_t["block"] == (32, 16)
+
+
+def test_plan_stats_cached_host_side():
+    """Stat queries fetch nnz to the host once and serve every subsequent
+    query from the cache."""
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(_operand_with_row_nnz(rng, 32, 64, 16, 32, [2, 1]))
+    plan = plan_operand(a, 16, 32)
+    assert plan.effectual_blocks() == 3
+    host = plan._host["nnz"]
+    assert plan.total_work() == 3 and plan.max_nnz() == 2
+    assert plan._host["nnz"] is host  # one fetch, every stat reuses it
+    assert plan.stats()["total_work"] == 3
