@@ -455,6 +455,128 @@ def bench_serve_decode():
     )
 
 
+def bench_dst_train():
+    """Dynamic sparse training micro: the two subsystem claims, gated.
+
+    (a) A RigL prune/regrow refresh applied as an incremental CSR edit
+    (``edit_plan``) must be >= 5x cheaper than a full replan at the
+    LM-head-scale 256x512 block mask — measured against *both* replan
+    flavors (the ``plan_blocks_csr`` values pass and the jitted
+    ``plan_from_mask_csr`` metadata dispatch) under a deliberately dense
+    512-prune + 512-regrow churn that defeats the small-delta splice path.
+
+    (b) The train step must get *faster* as the mask ramps: a jitted
+    planned-matmul train step (forward + both gradient products through
+    the plan, interpret backend so the dynamic grid tracks the schedule)
+    at the controller's 90%-sparse mask vs the same step dense-masked.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.tensordash_spmm import plan_blocks_csr, plan_from_mask_csr
+    from repro.runtime import Runtime
+    from repro.sparse_train import (
+        DynamicSparsityConfig,
+        DynamicSparsityController,
+        PlanDelta,
+        apply_block_masks,
+        apply_delta,
+        block_scores,
+        edit_plan,
+        plan_from_block_mask,
+    )
+
+    rng = np.random.default_rng(0)
+    # -- (a) plan-edit cost at the 256x512-block mask scale
+    mb, kb, bm, bk = 256, 512, 8, 8
+    mask = rng.random((mb, kb)) < 0.5
+    plan = plan_from_block_mask(
+        mask, bm=bm, bk=bk, shape=(mb * bm, kb * bk), dtype=jnp.float32
+    )
+    plan.workqueue()
+    act = np.stack(np.nonzero(mask), 1)
+    inact = np.stack(np.nonzero(~mask), 1)
+    delta = PlanDelta.make(
+        act[rng.choice(len(act), 512, replace=False)],
+        inact[rng.choice(len(inact), 512, replace=False)],
+    )
+    edit_us = _best_of(lambda: edit_plan(plan, delta))
+    newmask = apply_delta(mask, delta)
+    vals = np.zeros((mb * bm, kb * bk), np.float32)
+    vals[np.kron(newmask, np.ones((bm, bk))).astype(bool)] = 1.0
+    jv, jm = jnp.asarray(vals), jnp.asarray(newmask)
+    f_vals = jax.jit(lambda a: plan_blocks_csr(a, bm, bk))
+    f_mask = jax.jit(plan_from_mask_csr)
+    jax.block_until_ready(f_vals(jv)), jax.block_until_ready(f_mask(jm))
+    values_us = _best_of(lambda: jax.block_until_ready(f_vals(jv)))
+    meta_us = _best_of(lambda: jax.block_until_ready(f_mask(jm)))
+    ratio = min(values_us, meta_us) / max(edit_us, 1e-9)
+    if ratio < 5.0:
+        raise AssertionError(
+            f"incremental plan edit only {ratio:.1f}x cheaper than a full "
+            f"replan (edit={edit_us:.0f}us values={values_us:.0f}us "
+            f"metadata={meta_us:.0f}us) — gate is 5x at the 256x512 mask"
+        )
+
+    # -- (b) train-step wall vs mask sparsity (interpret backend)
+    m, k, n, sbm, sbk, sbn = 64, 256, 128, 16, 32, 16
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    params = {"w": w}
+    rt = Runtime(backend="interpret", bm=sbm, bk=sbk, bn=sbn)
+    from repro import runtime as rtm
+
+    with rtm.use(rt):
+        ctrl = DynamicSparsityController(
+            DynamicSparsityConfig(target=0.9, begin=0, end=8, update_every=1),
+            params,
+        )
+    path = next(iter(ctrl.units))
+    spec = ctrl.spec()
+    edit_ms = 0.0
+    for step in range(8):  # full cubic ramp, weight-magnitude prune scores
+        pm = apply_block_masks(params, ctrl.masks(), spec)
+        edit_ms += ctrl.update(step, block_scores(pm, spec))["edit_ms"]
+    fwd_sparse, _ = ctrl.plans(path)
+    u = ctrl.units[path]
+    fwd_dense = plan_from_block_mask(
+        np.ones_like(u.mask[0]).T, bm=fwd_sparse.bm, bk=fwd_sparse.bk,
+        shape=fwd_sparse.shape, dtype=fwd_sparse.dtype, side="B",
+    )
+
+    def make_step(p):
+        def step(w):
+            def loss(w):
+                out = rt.matmul(x, w, plan=p, side="B")
+                return jnp.mean((out - y) ** 2)
+
+            l, g = jax.value_and_grad(loss)(w)
+            return w - 0.05 * g, l
+
+        return jax.jit(step)
+
+    sd, ss = make_step(fwd_dense), make_step(fwd_sparse)
+    jax.block_until_ready(sd(w)), jax.block_until_ready(ss(w))  # warm
+    t_dense = _best_of(lambda: jax.block_until_ready(sd(w)), reps=5)
+    t_sparse = _best_of(lambda: jax.block_until_ready(ss(w)), reps=5)
+    step_ratio = t_dense / max(t_sparse, 1e-9)
+    if step_ratio < 1.3:
+        raise AssertionError(
+            f"train step at {ctrl.sparsity():.0%} mask sparsity only "
+            f"{step_ratio:.2f}x faster than dense-masked "
+            f"(sparse={t_sparse:.0f}us dense={t_dense:.0f}us) — gate is 1.3x"
+        )
+    return edit_us, (
+        f"edit={edit_us:.0f}us replan_values={values_us:.0f}us "
+        f"replan_metadata={meta_us:.0f}us edit_win={ratio:.1f}x "
+        f"ramp_sparsity={ctrl.sparsity():.2f} ramp_edit_total={edit_ms:.1f}ms "
+        f"step_dense={t_dense:.0f}us step_sparse={t_sparse:.0f}us "
+        f"step_win={step_ratio:.2f}x"
+    )
+
+
 def bench_arch_projection():
     from benchmarks.arch_projection import run
 
@@ -478,6 +600,7 @@ BENCHES = [
     ("plan_cache_micro", bench_plan_cache),
     ("backward_planned_micro", bench_backward_planned),
     ("serve_decode_micro", bench_serve_decode),
+    ("dst_train_micro", bench_dst_train),
     ("arch_tensordash_projection", bench_arch_projection),
 ]
 
@@ -490,6 +613,7 @@ SMOKE = {
     "plan_cache_micro",
     "backward_planned_micro",
     "serve_decode_micro",
+    "dst_train_micro",
 }
 
 

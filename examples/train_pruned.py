@@ -45,7 +45,7 @@ def main():
         params, opt, m = step_fn(params, opt, data.batch_at(i))
         if (i + 1) % args.refresh_every == 0:
             target_now = float(prune_schedule(jnp.int32(i), args.target, 0, args.steps))
-            prune = refresh_masks(params, prune, target_now)
+            prune = refresh_masks(params, target_now)
             params = apply_masks(params, prune)
             w = params["layers"]["mlp"]["w_gate"]
             frac = float(jnp.mean(w == 0))

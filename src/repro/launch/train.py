@@ -30,6 +30,34 @@ from repro.optim.adamw import OptConfig, init_opt_state
 from repro.parallel.sharding import param_pspecs
 from repro.train.step import make_train_step
 
+_DST_INT_KEYS = {"update_every", "begin", "end", "t_end", "min_size"}
+_DST_FLOAT_KEYS = {"target", "alpha"}
+
+
+def parse_dynamic_sparsity(spec: str) -> dict:
+    """``target=0.9,update_every=100`` -> DynamicSparsityConfig kwargs."""
+    kw: dict = {}
+    for item in filter(None, (s.strip() for s in spec.split(","))):
+        key, sep, val = item.partition("=")
+        key = key.strip().replace("-", "_")
+        if not sep:
+            raise argparse.ArgumentTypeError(
+                f"--dynamic-sparsity item {item!r} is not key=value"
+            )
+        if key in _DST_INT_KEYS:
+            kw[key] = int(val)
+        elif key in _DST_FLOAT_KEYS:
+            kw[key] = float(val)
+        elif key == "exclude":
+            kw[key] = tuple(filter(None, val.split("+")))
+        else:
+            raise argparse.ArgumentTypeError(
+                f"--dynamic-sparsity key {key!r} unknown (ints: "
+                f"{sorted(_DST_INT_KEYS)}, floats: {sorted(_DST_FLOAT_KEYS)}, "
+                "exclude=tok+tok)"
+            )
+    return kw
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -49,6 +77,12 @@ def main() -> None:
     ap.add_argument("--sparsity-taps", action="store_true",
                     help="record per-layer A/G densities + modeled TensorDash "
                          "speedup every step (paper Fig. 14 live view)")
+    ap.add_argument("--dynamic-sparsity", type=parse_dynamic_sparsity,
+                    default=None, metavar="KVS",
+                    help="RigL dynamic sparse training, e.g. "
+                         "'target=0.9,update_every=100' (keys = "
+                         "repro.sparse_train.DynamicSparsityConfig fields; "
+                         "ramp end defaults to --steps)")
     ap.add_argument("--bm", type=int, default=None, help="block rows (sparse kernels)")
     ap.add_argument("--bk", type=int, default=None, help="contraction block size")
     ap.add_argument("--bn", type=int, default=None, help="output block size")
@@ -62,8 +96,12 @@ def main() -> None:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
     cfg = dataclasses.replace(cfg, remat=not args.smoke)
     geom = {k: v for k, v in (("bm", args.bm), ("bk", args.bk), ("bn", args.bn)) if v}
-    if args.smoke and args.backend != "dense" and not geom:
-        geom = {"bm": 8, "bk": 16, "bn": 16}  # MXU-sized blocks don't divide smoke shapes
+    if args.smoke and not geom and (
+        args.backend != "dense" or args.dynamic_sparsity is not None
+    ):
+        # MXU-sized blocks don't divide smoke shapes (and would clamp a
+        # dynamic-sparsity mask to one block per weight — no granularity)
+        geom = {"bm": 8, "bk": 16, "bn": 16}
     rt = rtm.Runtime(backend=args.backend, mesh=mesh, **geom)
     rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU) vs silent dense fallback
 
@@ -77,8 +115,24 @@ def main() -> None:
         opt = init_opt_state(params)
         data = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
         ocfg = OptConfig(total_steps=max(args.steps, 100))
+        ctrl = masks = None
+        if args.dynamic_sparsity is not None:
+            from repro.sparse_train import (
+                DynamicSparsityConfig, DynamicSparsityController,
+            )
+
+            dkw = dict(args.dynamic_sparsity)
+            dkw.setdefault("end", args.steps)
+            ctrl = DynamicSparsityController(DynamicSparsityConfig(**dkw), params)
+            masks = ctrl.masks()
+            print(
+                f"dynamic sparsity: {len(ctrl.units)} weight(s), "
+                f"target {ctrl.cfg.target:.0%} by step {ctrl.cfg.end}, "
+                f"refresh every {ctrl.cfg.update_every}"
+            )
         step_fn = jax.jit(make_train_step(
-            cfg, ocfg, microbatches=args.microbatches, sparsity_taps=args.sparsity_taps
+            cfg, ocfg, microbatches=args.microbatches,
+            sparsity_taps=args.sparsity_taps, dynamic_sparsity=ctrl,
         ))
         guard = PreemptionGuard()
 
@@ -90,9 +144,22 @@ def main() -> None:
 
         for i in range(start, args.steps):
             t0 = time.time()
-            params, opt, m = step_fn(params, opt, data.batch_at(i))
+            if ctrl is not None:
+                params, opt, m = step_fn(params, opt, data.batch_at(i), masks)
+            else:
+                params, opt, m = step_fn(params, opt, data.batch_at(i))
             m = jax.device_get(m)
             dt = time.time() - t0
+            if ctrl is not None and ctrl.should_update(i):
+                rep = ctrl.update(i, m["dst_w_scores"], m["dst_g_scores"])
+                masks = ctrl.masks()
+                print(
+                    f"dst refresh step {rep['step']:5d} "
+                    f"sparsity {rep['sparsity']:.3f} "
+                    f"(target {rep['target_sparsity']:.3f}) "
+                    f"pruned {rep['pruned']} regrown {rep['regrown']} "
+                    f"plan-edit {rep['edit_ms']:.2f}ms"
+                )
             if dt > args.step_deadline:
                 print(f"step {i} exceeded deadline ({dt:.0f}s): checkpoint + abort")
                 if args.ckpt_dir:
@@ -100,6 +167,8 @@ def main() -> None:
                 return
             if (i + 1) % 5 == 0 or i == start:
                 line = f"step {i+1:5d} loss {float(m['loss']):.4f} gnorm {float(m['grad_norm']):.2f} {dt:.2f}s"
+                if ctrl is not None:
+                    line += f" Wdens={float(m['dst_density']):.2f}"
                 if args.sparsity_taps:
                     import numpy as np
 

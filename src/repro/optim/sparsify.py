@@ -10,6 +10,13 @@ amplified by methods that prune / quantise / selectively backpropagate).
 * :func:`meprop` — selective backprop: keep only the top-k-magnitude
   gradient columns per token (meProp); the discarded gradient entries are
   exact zeros in G_O, the paper's third sparsity source.
+
+These are the *static/unstructured* inducers.  For RigL-style dynamic
+sparse training — block-structured prune/regrow masks maintained as live
+CSR plan metadata with incremental work-queue edits — see
+:mod:`repro.sparse_train` (``DynamicSparsityController``), which supersedes
+the refresh-from-scratch loop here for training at the kernel's block
+granularity.
 """
 from __future__ import annotations
 
@@ -36,17 +43,32 @@ def init_prune(params) -> PruneState:
 
 
 def _mask_one(p, sparsity):
-    """Keep the largest-|p| fraction (1 - sparsity) of entries."""
+    """Keep exactly the largest-|p| ``n - floor(sparsity * n)`` entries.
+
+    ``jax.lax.top_k`` over the kept count replaces the full ``jnp.sort``
+    (O(n log n) over *every* entry per refresh); selecting by top-k *index*
+    rather than a magnitude threshold pins the kept count even when values
+    tie at the cut (ties break toward lower flat index, top_k's stable
+    order) — the old thresholded ``>=`` kept every tied entry, so a heavily
+    quantised tensor could silently miss its sparsity target.
+    """
     flat = jnp.abs(p.astype(jnp.float32)).reshape(-1)
-    k = jnp.clip(jnp.asarray(sparsity * flat.size, jnp.int32), 0, flat.size - 1)
-    thresh = jnp.sort(flat)[k]
-    return jnp.abs(p.astype(jnp.float32)) >= thresh
+    n = flat.size
+    keep = n - min(max(int(float(sparsity) * n), 0), n - 1)
+    _, top = jax.lax.top_k(flat, keep)
+    return jnp.zeros((n,), bool).at[top].set(True).reshape(p.shape)
 
 
-def refresh_masks(params, state: PruneState, sparsity, *, min_size: int = 256) -> PruneState:
+def refresh_masks(params, sparsity, *, min_size: int = 256) -> PruneState:
     """Recompute magnitude masks at the scheduled sparsity (dynamic sparse
     reparameterization: pruned weights may regrow on later refreshes since
-    masks are recomputed from current magnitudes, not intersected)."""
+    masks are recomputed from current magnitudes, not intersected).
+
+    Stateless by design — masks are a pure function of the current
+    magnitudes, so there is no previous :class:`PruneState` argument (the
+    old signature took and silently ignored one).  Drift-accounting regrow
+    lives in :mod:`repro.sparse_train`, which *does* carry state.
+    """
     masks = jax.tree.map(
         lambda p: _mask_one(p, sparsity) if p.size >= min_size and p.ndim >= 2 else jnp.ones(p.shape, bool),
         params,

@@ -1,0 +1,52 @@
+"""Dynamic sparse training: block-structured RigL prune/regrow whose mask
+updates are incremental CSR plan edits, not replans.
+
+Public surface:
+
+* :class:`DynamicSparsityController` / :class:`DynamicSparsityConfig` —
+  the host-side mask owner (``repro.sparse_train.controller``).
+* :func:`edit_plan` / :class:`PlanDelta` / :func:`plan_from_block_mask` —
+  the splice primitives (``repro.sparse_train.plan_edit``).
+* :func:`apply_block_masks` / :func:`block_abs_sum` /
+  :func:`expand_block_mask` — in-graph mask utilities
+  (``repro.sparse_train.masks``).
+
+Wired end-to-end via ``repro.train.step.make_train_step(dynamic_sparsity=)``
+and ``repro.launch.train --dynamic-sparsity``; benchmarked by
+``dst_train_micro``.
+"""
+from repro.sparse_train.controller import (
+    DynamicSparsityConfig,
+    DynamicSparsityController,
+)
+from repro.sparse_train.masks import (
+    apply_block_masks,
+    block_abs_sum,
+    block_scores,
+    expand_block_mask,
+    mask_density,
+    mask_paths,
+    maskable,
+)
+from repro.sparse_train.plan_edit import (
+    PlanDelta,
+    apply_delta,
+    edit_plan,
+    plan_from_block_mask,
+)
+
+__all__ = [
+    "DynamicSparsityConfig",
+    "DynamicSparsityController",
+    "PlanDelta",
+    "apply_delta",
+    "edit_plan",
+    "plan_from_block_mask",
+    "apply_block_masks",
+    "block_abs_sum",
+    "block_scores",
+    "expand_block_mask",
+    "mask_density",
+    "mask_paths",
+    "maskable",
+]

@@ -1,0 +1,289 @@
+"""RigL-style dynamic sparse training with incremental plan maintenance.
+
+:class:`DynamicSparsityController` owns the evolving block masks of every
+maskable weight (see :func:`repro.sparse_train.masks.maskable`) and the live
+:class:`~repro.runtime.plan.SparsityPlan` pair each weight executes with —
+the forward ``side="B"`` plan over ``w.T`` and the transposed backward plan
+over ``w``.  Mask updates follow RigL (Evci et al.): drop the
+lowest-|weight| active blocks, regrow the highest-|gradient| inactive ones,
+on an update fraction that cosine-decays to zero while the global sparsity
+rides the Zhu-Gupta cubic ramp (``repro.optim.sparsify.prune_schedule``).
+Scores are *block* L1 masses at the runtime's plan geometry, so the mask is
+a plan block mask by construction and every prune/regrow step is a sparse
+edit of CSR metadata — applied through
+:func:`repro.sparse_train.plan_edit.edit_plan` as a work-queue splice, never
+a full replan or a device values pass.
+
+Division of labour (the Graphcore dynamic-sparsity split): mask selection
+and plan maintenance run host-side in numpy between steps; the device only
+ever sees masked weights and (via the plan cache or explicit plan args) the
+already-spliced schedule.  The train step computes the two score trees
+in-graph (``repro.train.step.make_train_step(dynamic_sparsity=...)``) so
+scoring costs one fetch of ``[Kb, Nb]``-sized summaries, not of the weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import runtime as rtm
+from repro.runtime.runtime import _fit_block
+from repro.sparse_train import masks as mk
+from repro.sparse_train.plan_edit import PlanDelta, edit_plan, plan_from_block_mask
+
+__all__ = ["DynamicSparsityConfig", "DynamicSparsityController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicSparsityConfig:
+    """RigL schedule knobs.
+
+    ``target`` sparsity is reached via the cubic ramp over steps
+    ``[begin, end]``; mask updates fire every ``update_every`` steps until
+    ``t_end`` (default ``end``), with the prune/regrow churn fraction
+    ``alpha`` cosine-decayed to zero at ``t_end`` so the topology anneals.
+    """
+
+    target: float = 0.9
+    update_every: int = 100
+    begin: int = 0
+    end: int = 1000
+    alpha: float = 0.3
+    t_end: int | None = None
+    min_size: int = 256
+    exclude: tuple = ("embed",)
+
+    def __post_init__(self):
+        if not 0.0 <= self.target < 1.0:
+            raise ValueError(f"target sparsity {self.target} not in [0, 1)")
+        if self.update_every < 1:
+            raise ValueError("update_every must be >= 1")
+
+    @property
+    def stop_step(self) -> int:
+        return self.end if self.t_end is None else self.t_end
+
+    def sparsity_at(self, step: int) -> float:
+        """Scheduled global sparsity: the Zhu-Gupta cubic ramp."""
+        from repro.optim.sparsify import prune_schedule
+
+        return float(prune_schedule(step, self.target, self.begin, self.end))
+
+    def update_fraction(self, step: int) -> float:
+        """RigL's cosine-decayed churn fraction ``alpha/2 (1 + cos(pi t/T))``."""
+        t = min(max(step - self.begin, 0), max(self.stop_step - self.begin, 1))
+        return self.alpha / 2.0 * (1.0 + math.cos(math.pi * t / max(self.stop_step - self.begin, 1)))
+
+
+@dataclasses.dataclass
+class _Unit:
+    """One controlled weight: its mask and live plan pair per stacked layer."""
+
+    path: str
+    block: tuple[int, int]  # (bk', bn') — element block geometry
+    lead: tuple  # scanned-stack lead dims of the weight leaf
+    kb: int
+    nb: int
+    mask: np.ndarray  # [L, Kb, Nb] bool, L = prod(lead)
+    fwd: list  # L forward plans (side="B", over w.T: [Nb, Kb] block rows)
+    bwd: list  # L transposed backward plans (over w: [Kb, Nb] block rows)
+
+    @property
+    def layers(self) -> int:
+        return self.mask.shape[0]
+
+
+class DynamicSparsityController:
+    """Holds every layer's mask as live CSR metadata; prune/regrow steps are
+    delta edits to the cached work queues (see module docstring).
+
+    ``rt`` (default: the ambient runtime) supplies the block geometry and,
+    when it carries a plan cache, each edit *refreshes* the cached entries
+    under ``("dst", path, layer, "fwd"/"bwd")`` keys — anchored on the
+    plan's own ``idx`` metadata, the identity the autodiff transposed-plan
+    cache already uses — so eager/serving consumers replay the spliced
+    schedule and the cache never accumulates stale duplicates.
+    """
+
+    def __init__(self, cfg: DynamicSparsityConfig, params, rt=None):
+        self.cfg = cfg
+        self.rt = rtm.resolve(rt)
+        self.units: dict[str, _Unit] = {}
+        self.last_report: dict | None = None
+        for path, leaf in mk.mask_paths(
+            params, min_size=cfg.min_size, exclude=cfg.exclude
+        ).items():
+            k, n = leaf.shape[-2], leaf.shape[-1]
+            bk = _fit_block(self.rt.bk, k)
+            bn = _fit_block(self.rt.bn, n)
+            kb, nb = k // bk, n // bn
+            lead = tuple(leaf.shape[:-2])
+            layers = int(np.prod(lead, dtype=np.int64)) if lead else 1
+            mask = np.ones((layers, kb, nb), bool)
+            unit = _Unit(
+                path=path, block=(bk, bn), lead=lead, kb=kb, nb=nb, mask=mask,
+                fwd=[
+                    plan_from_block_mask(
+                        mask[l].T, bm=bn, bk=bk, shape=(n, k),
+                        dtype=leaf.dtype, side="B",
+                    )
+                    for l in range(layers)
+                ],
+                bwd=[
+                    plan_from_block_mask(
+                        mask[l], bm=bk, bk=bn, shape=(k, n), dtype=leaf.dtype,
+                    )
+                    for l in range(layers)
+                ],
+            )
+            self.units[path] = unit
+        if not self.units:
+            raise ValueError(
+                "dynamic sparsity found no maskable weights "
+                f"(min_size={cfg.min_size}, exclude={cfg.exclude})"
+            )
+        self._refresh_cache()
+
+    # -- views -------------------------------------------------------------
+    def spec(self) -> dict:
+        """Static ``{path: (bk', bn')}`` block geometry for the train step."""
+        return {p: u.block for p, u in self.units.items()}
+
+    def masks(self) -> dict:
+        """Device block masks ``{path: bool [*lead, Kb, Nb]}`` — the jit
+        argument :func:`repro.sparse_train.masks.apply_block_masks` takes."""
+        return {
+            p: jnp.asarray(u.mask.reshape(*u.lead, u.kb, u.nb))
+            for p, u in self.units.items()
+        }
+
+    def plans(self, path: str, layer: int = 0):
+        """The live ``(forward, backward)`` plan pair of one weight layer."""
+        u = self.units[path]
+        return u.fwd[layer], u.bwd[layer]
+
+    def density(self) -> float:
+        """Global fraction of weight elements still active (mask-weighted)."""
+        num = sum(
+            int(u.mask.sum()) * u.block[0] * u.block[1] for u in self.units.values()
+        )
+        den = sum(u.mask.size * u.block[0] * u.block[1] for u in self.units.values())
+        return num / max(den, 1)
+
+    def sparsity(self) -> float:
+        return 1.0 - self.density()
+
+    def layer_densities(self) -> dict:
+        """Per-unit live mask density — the sparsity-tap view."""
+        return {p: float(u.mask.mean()) for p, u in self.units.items()}
+
+    def should_update(self, step: int) -> bool:
+        c = self.cfg
+        if step < c.begin or step >= c.stop_step:
+            return False
+        return (step + 1 - c.begin) % c.update_every == 0
+
+    # -- the RigL update ---------------------------------------------------
+    def update(self, step: int, w_scores: dict, g_scores: dict | None = None) -> dict:
+        """One prune/regrow step: returns the per-refresh report
+        ``{step, sparsity, pruned, regrown, edit_ms, ...}``.
+
+        ``w_scores``/``g_scores`` are the ``dst_w_scores``/``dst_g_scores``
+        metric trees the dynamic train step emits (block L1 masses, shape
+        ``[*lead, Kb, Nb]`` per path).  ``g_scores=None`` regrows by
+        uniform-random-equivalent order (argpartition of zeros) — the
+        pure-ramp mode benchmarks use.
+        """
+        s_target = self.cfg.sparsity_at(step)
+        frac = self.cfg.update_fraction(step)
+        pruned = regrown = 0
+        t0 = time.perf_counter()
+        for path, u in self.units.items():
+            ws = np.asarray(w_scores[path], np.float32).reshape(u.layers, u.kb, u.nb)
+            gs = (
+                np.asarray(g_scores[path], np.float32).reshape(u.layers, u.kb, u.nb)
+                if g_scores is not None
+                else np.zeros((u.layers, u.kb, u.nb), np.float32)
+            )
+            for l in range(u.layers):
+                delta = self._select(u.mask[l], ws[l], gs[l], s_target, frac)
+                if delta.size == 0:
+                    continue
+                pruned += len(delta.prune)
+                regrown += len(delta.regrow)
+                # weight-oriented delta edits the backward plan directly and
+                # the forward (transposed-operand) plan swapped — one
+                # selection, both schedules spliced
+                u.bwd[l] = edit_plan(u.bwd[l], delta)
+                u.fwd[l] = edit_plan(u.fwd[l], delta.swapped())
+                m = u.mask[l]
+                if len(delta.prune):
+                    m[delta.prune[:, 0], delta.prune[:, 1]] = False
+                if len(delta.regrow):
+                    m[delta.regrow[:, 0], delta.regrow[:, 1]] = True
+        edit_ms = (time.perf_counter() - t0) * 1e3
+        self._refresh_cache()
+        self.last_report = {
+            "step": step,
+            "sparsity": self.sparsity(),
+            "target_sparsity": s_target,
+            "update_fraction": frac,
+            "pruned": pruned,
+            "regrown": regrown,
+            "edit_ms": edit_ms,
+        }
+        return self.last_report
+
+    @staticmethod
+    def _select(mask, w_score, g_score, s_target: float, frac: float) -> PlanDelta:
+        """RigL block selection for one layer's ``[Kb, Nb]`` mask.
+
+        Prunes the lowest-|w| active blocks down to the scheduled budget
+        plus the churn, regrows the highest-|g| previously-inactive blocks
+        back up to the budget — so the active count lands exactly on the
+        cubic ramp while ``frac`` of it turns over.
+        """
+        b = mask.size
+        active = int(mask.sum())
+        desired = max(int(round((1.0 - s_target) * b)), 1)
+        shrink = max(active - desired, 0)
+        churn = int(round(frac * min(desired, active)))
+        # churn is a swap: every churned prune must be matched by a regrow
+        # from the inactive pool, so cap it by the room left there (at full
+        # density there is nothing to swap with — pruning would undershoot
+        # the scheduled budget)
+        churn = min(churn, b - max(active, desired))
+        n_prune = min(active, shrink + churn)
+        n_regrow = min(max(desired - (active - n_prune), 0), b - active)
+
+        flat_w = np.where(mask.reshape(-1), w_score.reshape(-1), np.inf)
+        flat_g = np.where(mask.reshape(-1), -np.inf, g_score.reshape(-1))
+        prune = (
+            np.argpartition(flat_w, n_prune - 1)[:n_prune]
+            if n_prune else np.empty((0,), np.int64)
+        )
+        regrow = (
+            np.argpartition(-flat_g, n_regrow - 1)[:n_regrow]
+            if n_regrow else np.empty((0,), np.int64)
+        )
+        nb = mask.shape[1]
+        return PlanDelta.make(
+            np.stack([prune // nb, prune % nb], axis=1) if len(prune) else np.empty((0, 2)),
+            np.stack([regrow // nb, regrow % nb], axis=1) if len(regrow) else np.empty((0, 2)),
+        )
+
+    def _refresh_cache(self) -> None:
+        """(Re)store every live plan in the runtime's plan cache, anchored on
+        the plan's own ``idx`` metadata; ``PlanCache.store`` pops an existing
+        key before reinserting, so edits refresh entries in place."""
+        cache = self.rt.plan_cache
+        if cache is None:
+            return
+        for path, u in self.units.items():
+            for l in range(u.layers):
+                cache.store(("dst", path, l, "fwd"), u.fwd[l].idx, u.fwd[l])
+                cache.store(("dst", path, l, "bwd"), u.bwd[l].idx, u.bwd[l])

@@ -1,0 +1,121 @@
+"""Block-structured weight masks at the runtime's plan geometry.
+
+The subsystem's load-bearing invariant: every weight mask is a *block* mask
+at exactly the ``(bk, bn)`` granularity the ambient
+:class:`~repro.runtime.Runtime` plans ``side="B"`` matmuls with.  A masked
+weight therefore has entirely-zero blocks wherever the mask is off, so the
+in-graph value planner (``plan_blocks``) recovers the controller's mask *by
+construction* — the forward kernel, the sparsity-aware backward products and
+the controller's host-side CSR metadata all see one schedule, with no
+separate mask plumbing into the traced model.
+
+Masks here are weight-oriented ``[*lead, K/bk', N/bn']`` boolean arrays
+(lead dims are scanned-stack layers); the planned forward operand is
+``w.T``, so a plan's ``[Rb, Kb]`` mask is the transpose of the weight
+block mask (see ``DynamicSparsityController``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "maskable",
+    "expand_block_mask",
+    "apply_block_masks",
+    "block_abs_sum",
+    "block_scores",
+    "mask_density",
+    "mask_paths",
+]
+
+
+def maskable(path: str, p, *, min_size: int = 256, exclude=()) -> bool:
+    """Whether leaf ``p`` at tree path ``path`` participates in dynamic
+    sparsity: a 2-D-or-stacked weight matrix, big enough to matter, and not
+    an excluded family (embeddings/norms/biases stay dense — RigL's usual
+    carve-out, and the repo's matmul path only exploits 2-D weight blocks)."""
+    if p.ndim < 2 or p.shape[-1] < 2 or p.shape[-2] < 2:
+        return False
+    if p.shape[-1] * p.shape[-2] < min_size:
+        return False
+    return not any(tok in path for tok in exclude)
+
+
+def mask_paths(params, *, min_size: int = 256, exclude=()) -> dict:
+    """``{keystr path: leaf}`` of every maskable weight in ``params``."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return {
+        jax.tree_util.keystr(path): leaf
+        for path, leaf in flat
+        if maskable(jax.tree_util.keystr(path), leaf,
+                    min_size=min_size, exclude=exclude)
+    }
+
+
+def expand_block_mask(mask, block: tuple[int, int]):
+    """Broadcast a ``[*lead, Kb, Nb]`` block mask to element granularity
+    ``[*lead, Kb*bk, Nb*bn]`` (a pure reshape/broadcast; no gather)."""
+    bk, bn = block
+    kb, nb = mask.shape[-2], mask.shape[-1]
+    lead = mask.shape[:-2]
+    m = mask.reshape(*lead, kb, 1, nb, 1)
+    m = jnp.broadcast_to(m, (*lead, kb, bk, nb, bn))
+    return m.reshape(*lead, kb * bk, nb * bn)
+
+
+def block_abs_sum(x, block: tuple[int, int]):
+    """Per-block L1 mass of ``x [*lead, K, N]`` -> ``[*lead, Kb, Nb]`` fp32
+    — the magnitude score RigL prunes on (weights) and regrows on
+    (gradients), at the same granularity the mask lives at."""
+    bk, bn = block
+    k, n = x.shape[-2], x.shape[-1]
+    lead = x.shape[:-2]
+    blocks = jnp.abs(x.astype(jnp.float32)).reshape(
+        *lead, k // bk, bk, n // bn, bn
+    )
+    return blocks.sum(axis=(-3, -1))
+
+
+def block_scores(tree, spec: dict) -> dict:
+    """``{path: block_abs_sum(leaf)}`` for every controlled leaf of
+    ``tree`` — applied to masked params it yields the controller's prune
+    scores, to pre-mask grads its regrow scores (RigL's dense gradients)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key in spec:
+            out[key] = block_abs_sum(leaf, spec[key])
+    return out
+
+
+def mask_density(masks: dict, spec: dict):
+    """Element-weighted live density of the mask set (in-graph scalar)."""
+    num = sum(
+        masks[p].sum() * spec[p][0] * spec[p][1] for p in masks
+    )
+    den = sum(masks[p].size * spec[p][0] * spec[p][1] for p in masks)
+    return num.astype(jnp.float32) / max(den, 1)
+
+
+def apply_block_masks(params, masks: dict, spec: dict):
+    """Zero the masked-off blocks of every controlled weight.
+
+    ``masks`` maps keystr paths to ``[*lead, Kb, Nb]`` boolean block masks
+    (a plain dict, so it is a valid jit argument); ``spec`` maps the same
+    paths to their static ``(bk, bn)`` block geometry (from
+    ``DynamicSparsityController.spec()``).  Uncontrolled leaves pass
+    through untouched.  Works on gradients too — masking grads before the
+    optimizer is what pins pruned weights (and their Adam moments' updates)
+    at zero between refreshes.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key in masks:
+            m = expand_block_mask(masks[key], spec[key])
+            leaf = leaf * m.astype(leaf.dtype)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

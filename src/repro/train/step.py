@@ -114,6 +114,7 @@ def make_train_step(
     microbatches: int = 1,
     donate: bool = True,
     sparsity_taps: bool = False,
+    dynamic_sparsity=None,
 ):
     """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
     metrics)``.  ``batch`` is the global batch; with ``microbatches > 1`` it
@@ -123,9 +124,29 @@ def make_train_step(
     ``sparsity_taps=True`` (dense/moe token-LM families) adds per-layer
     ``A_density`` / ``G_density`` vectors and a ``modeled_speedup`` scalar
     to the metrics; with microbatches the densities are averaged.
+
+    ``dynamic_sparsity`` threads RigL mask state through the step: pass a
+    ``repro.sparse_train.DynamicSparsityController`` (or its ``spec()``
+    dict) and the step signature becomes ``train_step(params, opt_state,
+    batch, masks)`` with ``masks = controller.masks()``.  Each step then
+    (1) applies the block masks to the weights (so the planned kernels see
+    exactly-zero blocks — the mask *is* the ``SparsityPlan``), (2) takes
+    gradients at the masked point (RigL's dense gradients), (3) emits the
+    controller's block-score trees as ``dst_w_scores`` / ``dst_g_scores``
+    metrics plus a live ``dst_density`` scalar, and (4) masks the gradients
+    before the optimizer so pruned weights stay pinned at zero between
+    refreshes — regrown blocks restart from zero, no straight-through
+    estimator needed.
     """
     mesh = rtm.active_mesh()
     loss_fn = _make_loss(cfg, mesh)
+    dst_spec = None
+    if dynamic_sparsity is not None:
+        dst_spec = (
+            dynamic_sparsity.spec()
+            if hasattr(dynamic_sparsity, "spec")
+            else dict(dynamic_sparsity)
+        )
     if sparsity_taps and (cfg.family not in ("dense", "moe") or cfg.frontend is not None):
         raise ValueError(
             f"sparsity_taps: unsupported family {cfg.family!r} / frontend "
@@ -167,7 +188,18 @@ def make_train_step(
         )(params, _zero_probes(batch), batch)
         return loss, grads, _tap_metrics(cfg, taps, gprobes)
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, batch, masks=None):
+        from repro.sparse_train.masks import (
+            apply_block_masks, block_scores, mask_density,
+        )
+
+        if dst_spec is not None:
+            if masks is None:
+                raise TypeError(
+                    "dynamic_sparsity train step takes masks: "
+                    "train_step(params, opt_state, batch, controller.masks())"
+                )
+            params = apply_block_masks(params, masks, dst_spec)
         if microbatches == 1:
             loss, grads, tapm = grads_of(params, batch)
             grads = _constrain_grads(grads)
@@ -196,10 +228,28 @@ def make_train_step(
             )
             grads = jax.tree.map(lambda g: g / microbatches, grads)
             loss = loss / microbatches
+        dstm = {}
+        if dst_spec is not None:
+            # scores before the grad mask: RigL regrows on the *dense*
+            # gradient's block mass; prune scores come from the (already
+            # masked) weights.  Masking the grads afterwards pins pruned
+            # weights (and their optimizer updates) at exactly zero.
+            dstm = {
+                "dst_w_scores": block_scores(params, dst_spec),
+                "dst_g_scores": block_scores(grads, dst_spec),
+                "dst_density": mask_density(masks, dst_spec),
+            }
+            grads = apply_block_masks(grads, masks, dst_spec)
         params, opt_state, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+        if dst_spec is not None:
+            # stale Adam momentum would drift just-pruned entries off zero;
+            # re-mask so stored weights always carry exactly-zero blocks
+            # (what makes value planning recover the mask by construction)
+            params = apply_block_masks(params, masks, dst_spec)
         metrics["loss"] = loss
         metrics["param_norm"] = global_norm(params)
         metrics.update(tapm)
+        metrics.update(dstm)
         return params, opt_state, metrics
 
     return train_step

@@ -57,18 +57,33 @@ def test_error_feedback_preserves_signal():
 def test_prune_schedule_and_masks():
     import jax
     import jax.numpy as jnp
-    from repro.optim.sparsify import (
-        apply_masks, init_prune, prune_schedule, refresh_masks,
-    )
+    from repro.optim.sparsify import apply_masks, prune_schedule, refresh_masks
 
     s0 = float(prune_schedule(jnp.int32(0), 0.9, 0, 100))
     s_end = float(prune_schedule(jnp.int32(100), 0.9, 0, 100))
     assert s0 == 0.0 and abs(s_end - 0.9) < 1e-6
     params = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 32))}
-    st = refresh_masks(params, init_prune(params), 0.75)
+    st = refresh_masks(params, 0.75)
     masked = apply_masks(params, st)
     frac = float(jnp.mean(masked["w"] == 0))
-    assert 0.70 < frac < 0.80  # ~75% zeros, TensorDash-exploitable
+    assert frac == 768 / 1024  # exactly floor(0.75 * n) zeros
+
+
+def test_mask_refresh_pins_kept_count_under_ties():
+    """top_k index selection keeps an exact count even when magnitudes tie
+    at the cut — the thresholded sort kept every tied entry and overshot."""
+    from repro.optim.sparsify import refresh_masks
+
+    params = {"w": jnp.ones((16, 16))}  # every |w| ties
+    st = refresh_masks(params, 0.75)
+    kept = int(st.masks["w"].sum())
+    assert kept == 256 - int(0.75 * 256)  # exactly n - floor(s*n)
+    # mixed ties: half zeros, half ones, cut lands inside the ones
+    w = jnp.concatenate([jnp.zeros(128), jnp.ones(128)]).reshape(16, 16)
+    st = refresh_masks({"w": w}, 0.6)
+    assert int(st.masks["w"].sum()) == 256 - int(0.6 * 256)
+    # and the kept entries are drawn from the larger-magnitude tie class
+    assert bool((jnp.where(st.masks["w"].reshape(-1))[0] >= 128).all())
 
 
 def test_pact_quantization_induces_zeros():

@@ -1,0 +1,309 @@
+"""Dynamic sparse training subsystem: incremental plan edits are
+bit-identical to from-scratch replans; the controller keeps masks, plans and
+the plan cache coherent; the train step pins pruned blocks at exactly zero.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.tensordash_spmm import plan_blocks_csr, plan_to_mask
+from repro.runtime import Runtime
+from repro.sparse_train import (
+    DynamicSparsityConfig,
+    DynamicSparsityController,
+    PlanDelta,
+    apply_block_masks,
+    apply_delta,
+    block_abs_sum,
+    block_scores,
+    edit_plan,
+    expand_block_mask,
+    plan_from_block_mask,
+)
+from repro.sparse_train.plan_edit import _SPLICE_MAX_ROW_FRACTION
+
+
+def _replan_reference(mask, bm, bk):
+    """From-scratch ``plan_blocks_csr`` of an operand whose block-nonzero
+    map is ``mask`` — the ground truth every edited plan must match."""
+    mb, kb = mask.shape
+    vals = np.zeros((mb * bm, kb * bk), np.float32)
+    vals[np.kron(mask, np.ones((bm, bk))).astype(bool)] = 1.0
+    return plan_blocks_csr(jnp.asarray(vals), bm, bk)
+
+
+def _assert_plan_equals(plan, ref):
+    got = [plan.nnz, plan.idx, plan.row_starts, plan.work_row, plan.work_kblk]
+    for name, a, b in zip(["nnz", "idx", "row_starts", "work_row", "work_kblk"], got, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def _random_delta(rng, mask, n_prune, n_regrow):
+    act = np.stack(np.nonzero(mask), 1)
+    inact = np.stack(np.nonzero(~mask), 1)
+    p = (
+        act[rng.choice(len(act), min(n_prune, len(act)), replace=False)]
+        if len(act) and n_prune else np.empty((0, 2))
+    )
+    g = (
+        inact[rng.choice(len(inact), min(n_regrow, len(inact)), replace=False)]
+        if len(inact) and n_regrow else np.empty((0, 2))
+    )
+    return PlanDelta.make(p, g)
+
+
+def test_plan_from_block_mask_matches_plan_blocks_csr():
+    rng = np.random.default_rng(0)
+    for mb, kb, dens in [(8, 8, 0.5), (16, 32, 0.1), (32, 16, 0.9), (8, 8, 0.0)]:
+        mask = rng.random((mb, kb)) < dens
+        plan = plan_from_block_mask(
+            mask, bm=4, bk=4, shape=(mb * 4, kb * 4), dtype=jnp.float32
+        )
+        _assert_plan_equals(plan, _replan_reference(mask, 4, 4))
+
+
+@pytest.mark.parametrize(
+    "n_prune,n_regrow",
+    [(6, 0), (0, 6), (6, 6), (64, 64)],
+    ids=["prune_only", "regrow_only", "mixed_small", "mixed_dense"],
+)
+def test_edit_plan_bit_identical_to_replan(n_prune, n_regrow):
+    """The core property: a spliced (or entry-merged) edit equals a
+    from-scratch replan of the edited mask, bit for bit, across both edit
+    paths and several densities — and composes over repeated edits."""
+    rng = np.random.default_rng(1 + n_prune * 7 + n_regrow)
+    for dens in (0.1, 0.5, 0.9):
+        mask = rng.random((32, 32)) < dens
+        plan = plan_from_block_mask(
+            mask, bm=4, bk=4, shape=(128, 128), dtype=jnp.float32
+        )
+        for _ in range(3):  # repeated edits: each output is the next input
+            delta = _random_delta(rng, mask, n_prune, n_regrow)
+            plan = edit_plan(plan, delta)
+            mask = apply_delta(mask, delta)
+            _assert_plan_equals(plan, _replan_reference(mask, 4, 4))
+
+
+def test_edit_plan_covers_both_paths():
+    """Both the gap-segment splice (small deltas) and the entry-stream merge
+    (dense deltas) are exercised at 32 rows, and agree with the reference."""
+    rng = np.random.default_rng(2)
+    mask = rng.random((32, 32)) < 0.5
+    plan = plan_from_block_mask(mask, bm=4, bk=4, shape=(128, 128), dtype=jnp.float32)
+    small = _random_delta(rng, mask, 2, 2)
+    assert len(np.unique(np.concatenate(
+        [small.prune[:, 0], small.regrow[:, 0]]
+    ))) <= _SPLICE_MAX_ROW_FRACTION * 32  # splice path
+    _assert_plan_equals(edit_plan(plan, small),
+                        _replan_reference(apply_delta(mask, small), 4, 4))
+    dense = _random_delta(rng, mask, 100, 100)
+    assert len(np.unique(np.concatenate(
+        [dense.prune[:, 0], dense.regrow[:, 0]]
+    ))) > _SPLICE_MAX_ROW_FRACTION * 32  # entry-merge path
+    _assert_plan_equals(edit_plan(plan, dense),
+                        _replan_reference(apply_delta(mask, dense), 4, 4))
+
+
+def test_edit_plan_all_zero_row_round_trip():
+    """Pruning a row empty keeps its gated placeholder work item; regrowing
+    from empty restores real entries — both bit-identical to the replan."""
+    mask = np.zeros((8, 8), bool)
+    mask[3, [1, 4]] = True
+    mask[5, 2] = True
+    plan = plan_from_block_mask(mask, bm=4, bk=4, shape=(32, 32), dtype=jnp.float32)
+    d1 = PlanDelta.make([[5, 2]], [])  # row 5 -> all-zero
+    plan1 = edit_plan(plan, d1)
+    mask1 = apply_delta(mask, d1)
+    _assert_plan_equals(plan1, _replan_reference(mask1, 4, 4))
+    d2 = PlanDelta.make([], [[5, 0], [5, 7], [0, 3]])  # regrow from empty
+    plan2 = edit_plan(plan1, d2)
+    mask2 = apply_delta(mask1, d2)
+    _assert_plan_equals(plan2, _replan_reference(mask2, 4, 4))
+    # prune-everything: the whole plan degenerates to placeholders
+    act = np.stack(np.nonzero(mask2), 1)
+    d3 = PlanDelta.make(act, [])
+    plan3 = edit_plan(plan2, d3)
+    _assert_plan_equals(plan3, _replan_reference(np.zeros_like(mask2), 4, 4))
+
+
+def test_edit_plan_validation_errors():
+    rng = np.random.default_rng(3)
+    mask = rng.random((16, 16)) < 0.5
+    plan = plan_from_block_mask(mask, bm=4, bk=4, shape=(64, 64), dtype=jnp.float32)
+    inact = np.stack(np.nonzero(~mask), 1)
+    act = np.stack(np.nonzero(mask), 1)
+    with pytest.raises(ValueError, match="prune of inactive"):
+        edit_plan(plan, PlanDelta.make(inact[:1], []))
+    with pytest.raises(ValueError, match="regrow of active"):
+        edit_plan(plan, PlanDelta.make([], act[:1]))
+    with pytest.raises(ValueError, match="row out of range"):
+        edit_plan(plan, PlanDelta.make([[16, 0]], []))
+    with pytest.raises(ValueError, match="k-block out of range"):
+        edit_plan(plan, PlanDelta.make([], [[0, 16]]))
+    # the dense (entry-merge) path raises the same family of errors
+    with pytest.raises(ValueError, match="prune of inactive"):
+        edit_plan(plan, PlanDelta.make(np.concatenate([act[:40], inact[:1]]), []))
+    with pytest.raises(ValueError, match="same block"):
+        edit_plan(plan, PlanDelta.make(act[:40], act[:1]))
+    # no-op delta returns the plan unchanged (same object)
+    assert edit_plan(plan, PlanDelta.make([], [])) is plan
+
+
+def test_mask_utilities_round_trip():
+    rng = np.random.default_rng(4)
+    mask = jnp.asarray(rng.random((4, 6)) < 0.5)
+    em = expand_block_mask(mask, (8, 4))
+    assert em.shape == (32, 24)
+    np.testing.assert_array_equal(
+        np.asarray(em).reshape(4, 8, 6, 4).any(axis=(1, 3)), np.asarray(mask)
+    )
+    x = jnp.asarray(rng.standard_normal((32, 24)).astype(np.float32))
+    s = block_abs_sum(x, (8, 4))
+    assert s.shape == (4, 6)
+    np.testing.assert_allclose(
+        np.asarray(s),
+        np.abs(np.asarray(x)).reshape(4, 8, 6, 4).sum(axis=(1, 3)),
+        rtol=1e-5,
+    )
+
+
+def test_controller_ramp_plans_and_cache():
+    """The controller's mask rides the cubic ramp; its forward/backward
+    plans are always the mask's transpose pair; edited plans *refresh* the
+    plan-cache entries instead of accumulating duplicates."""
+    rng = np.random.default_rng(5)
+    rt = Runtime(backend="dense", bm=8, bk=16, bn=16)
+    params = {"w": jnp.asarray(rng.standard_normal((64, 48)).astype(np.float32))}
+    cfg = DynamicSparsityConfig(target=0.75, begin=0, end=6, update_every=1,
+                                alpha=0.3, min_size=256)
+    ctrl = DynamicSparsityController(cfg, params, rt=rt)
+    (path,) = ctrl.units
+    spec = ctrl.spec()
+    assert ctrl.density() == 1.0
+    n_entries = len(rt.plan_cache)
+    assert n_entries == 2  # fwd + bwd for the single layer
+
+    for step in range(6):
+        assert ctrl.should_update(step)  # update_every=1 inside the ramp
+        pm = apply_block_masks(params, ctrl.masks(), spec)
+        gs = {path: jnp.asarray(rng.random((4, 3)).astype(np.float32))}
+        rep = ctrl.update(step, block_scores(pm, spec), gs)
+        assert rep["edit_ms"] >= 0.0
+        # live sparsity lands exactly on the scheduled block budget
+        b = ctrl.units[path].mask[0].size
+        desired = max(int(round((1.0 - cfg.sparsity_at(step)) * b)), 1)
+        assert int(ctrl.units[path].mask.sum()) == desired
+        # plans stay the mask's transpose pair (forward plans w.T)
+        fwd, bwd = ctrl.plans(path)
+        np.testing.assert_array_equal(
+            np.asarray(plan_to_mask(jnp.asarray(fwd.nnz), jnp.asarray(fwd.idx))),
+            ctrl.units[path].mask[0].T,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(plan_to_mask(jnp.asarray(bwd.nnz), jnp.asarray(bwd.idx))),
+            ctrl.units[path].mask[0],
+        )
+        # refreshed, never duplicated — and the cached plan is the live one
+        assert len(rt.plan_cache) == n_entries
+        assert rt.plan_cache.lookup(("dst", path, 0, "fwd"), fwd.idx,
+                                    fwd.bm, fwd.bk, side="B") is fwd
+
+    assert not ctrl.should_update(6)  # past stop_step
+    assert abs(ctrl.sparsity() - 0.75) < 0.05
+
+
+def test_controller_full_density_schedule_is_stable():
+    """At target sparsity 0 the churn has no inactive pool to swap with:
+    updates must leave the mask dense rather than undershooting."""
+    rng = np.random.default_rng(6)
+    rt = Runtime(backend="dense", bm=8, bk=16, bn=16)
+    params = {"w": jnp.asarray(rng.standard_normal((64, 48)).astype(np.float32))}
+    ctrl = DynamicSparsityController(
+        DynamicSparsityConfig(target=0.0, begin=0, end=4, update_every=1), params, rt=rt
+    )
+    for step in range(4):
+        ctrl.update(step, block_scores(params, ctrl.spec()))
+        assert ctrl.density() == 1.0
+
+
+def test_controller_rejects_empty_param_set():
+    with pytest.raises(ValueError, match="no maskable weights"):
+        DynamicSparsityController(
+            DynamicSparsityConfig(min_size=10 ** 9),
+            {"w": jnp.zeros((8, 8))},
+            rt=Runtime(backend="dense"),
+        )
+
+
+def test_train_step_integration_pins_zero_blocks():
+    """End-to-end: the dynamic train step trains (loss decreases), emits the
+    score/density metrics, keeps pruned blocks at exactly zero through the
+    optimizer, and the controller's refresh consumes the emitted scores."""
+    from repro.configs import get_config, reduce_config
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import model as M
+    from repro.models.common import init_params
+    from repro.optim.adamw import OptConfig, init_opt_state
+    from repro.train.step import make_train_step
+    from repro import runtime as rtm
+
+    cfg = reduce_config(get_config("qwen3-4b"))
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4, seed=7)
+    rt = Runtime(backend="dense", bm=8, bk=16, bn=16)
+    with rtm.use(rt):
+        ctrl = DynamicSparsityController(
+            DynamicSparsityConfig(target=0.5, begin=0, end=8, update_every=2),
+            params,
+        )
+        spec = ctrl.spec()
+        step = jax.jit(make_train_step(
+            cfg, OptConfig(lr=3e-3, warmup_steps=2, total_steps=40,
+                           weight_decay=0.0),
+            dynamic_sparsity=ctrl,
+        ))
+        masks = ctrl.masks()
+        losses = []
+        for i in range(10):
+            params, opt, m = step(params, opt, data.batch_at(i), masks)
+            m = jax.device_get(m)
+            losses.append(float(m["loss"]))
+            assert set(spec) == set(m["dst_w_scores"]) == set(m["dst_g_scores"])
+            if ctrl.should_update(i):
+                ctrl.update(i, m["dst_w_scores"], m["dst_g_scores"])
+                masks = ctrl.masks()
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.2, losses
+    assert 0.4 < ctrl.sparsity() <= 0.6
+    assert float(m["dst_density"]) < 1.0
+    # stored params carry exactly-zero blocks wherever the mask is off —
+    # the invariant that makes value planning recover the mask
+    masked = apply_block_masks(params, ctrl.masks(), spec)
+    flat, _ = jax.tree_util.tree_flatten_with_path(masked)
+    checked = 0
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in spec:
+            continue
+        u = ctrl.units[key]
+        lf = np.asarray(leaf).reshape(u.layers, u.kb * u.block[0], u.nb * u.block[1])
+        for l in range(u.layers):
+            blk = np.abs(lf[l]).reshape(
+                u.kb, u.block[0], u.nb, u.block[1]
+            ).sum(axis=(1, 3))
+            np.testing.assert_array_equal(blk != 0.0, u.mask[l] & (blk != 0.0))
+            assert (blk[~u.mask[l]] == 0.0).all()
+            checked += 1
+    assert checked >= 1
+
+
+def test_train_step_requires_masks_when_dynamic():
+    from repro.configs import get_config, reduce_config
+    from repro.optim.adamw import OptConfig
+    from repro.train.step import make_train_step
+
+    cfg = reduce_config(get_config("qwen3-4b"))
+    step = make_train_step(cfg, OptConfig(), dynamic_sparsity={"x": (8, 8)})
+    with pytest.raises(TypeError, match="masks"):
+        step({}, {}, {"tokens": jnp.zeros((2, 4), jnp.int32)})
