@@ -30,6 +30,7 @@ from repro.models import model as M
 from repro.models.common import Spec, abstract_params
 from repro.optim.adamw import OptConfig, OptState, init_opt_state
 from repro.parallel.sharding import (
+    ShardingPolicy,
     batch_pspecs,
     cache_pspecs,
     param_pspecs,
@@ -131,7 +132,7 @@ def _compile_once(cfg, arch: str, shape_name: str, multi_pod: bool, *, full: boo
     t0 = time.time()
     # the dry-run lowers on the dense backend (CPU cannot lower TPU Pallas);
     # the ambient Runtime supplies the mesh to every model entry point
-    with mesh, rtm.use(rtm.Runtime(backend="dense", mesh=mesh)):
+    with mesh, rtm.use(rtm.Runtime(backend="dense", sharding=ShardingPolicy(mesh=mesh))):
         if shape.kind == "train":
             abatch = input_specs(cfg, shape)
             bps = batch_pspecs(cfg, shape, mesh)

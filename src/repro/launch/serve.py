@@ -26,6 +26,7 @@ from repro.configs import get_config, reduce_config
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.models.common import init_params
+from repro.parallel.sharding import ShardingPolicy
 from repro.serve import engine as serve_engine
 from repro.serve.engine import ServeEngine
 
@@ -62,7 +63,8 @@ def main() -> None:
     else:
         mesh = make_production_mesh()
     geom = dict(zip(("bm", "bk", "bn"), args.block)) if args.block else {}
-    rt = rtm.Runtime(backend=args.backend, mesh=mesh, **geom)
+    policy = ShardingPolicy(mesh=mesh)
+    rt = rtm.Runtime(backend=args.backend, sharding=policy, **geom)
     rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU)
 
     params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
@@ -119,11 +121,16 @@ def main() -> None:
     # count per output-column block — alongside the skipped fraction it
     # makes row-density skew (the thing v3's work queue absorbs and v2's
     # max(nnz) bound could not) observable in production traces
-    for ps in rt.plan_cache.plan_stats():
-        print(f"  plan key={ps['key']!r} side={ps['side']} "
-              f"shape={tuple(ps['shape'])} block={ps['block']} "
-              f"total_work={ps['total_work']}/{ps['blocks']} blocks "
-              f"skipped={ps['skipped_fraction']:.0%}")
+    n_shards = policy.spmm_axes("M")[1]
+    for ps in rt.plan_cache.plan_stats(shards=n_shards):
+        line = (f"  plan key={ps['key']!r} side={ps['side']} "
+                f"shape={tuple(ps['shape'])} block={ps['block']} "
+                f"total_work={ps['total_work']}/{ps['blocks']} blocks "
+                f"skipped={ps['skipped_fraction']:.0%}")
+        if "imbalance" in ps:
+            # max/mean per-device ragged-grid steps under the serpentine deal
+            line += f" imbalance={ps['imbalance']:.2f}x over {n_shards} devices"
+        print(line)
 
 
 if __name__ == "__main__":

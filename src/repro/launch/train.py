@@ -17,8 +17,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
-
 from repro import runtime as rtm
 from repro.checkpoint.manager import PreemptionGuard, latest_step, restore, save
 from repro.configs import get_config, reduce_config
@@ -27,7 +25,7 @@ from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import model as M
 from repro.models.common import init_params
 from repro.optim.adamw import OptConfig, init_opt_state
-from repro.parallel.sharding import param_pspecs
+from repro.parallel.sharding import ShardingPolicy
 from repro.train.step import make_train_step
 
 _DST_INT_KEYS = {"update_every", "begin", "end", "t_end", "min_size"}
@@ -102,12 +100,12 @@ def main() -> None:
         # MXU-sized blocks don't divide smoke shapes (and would clamp a
         # dynamic-sparsity mask to one block per weight — no granularity)
         geom = {"bm": 8, "bk": 16, "bn": 16}
-    rt = rtm.Runtime(backend=args.backend, mesh=mesh, **geom)
+    policy = ShardingPolicy(mesh=mesh)
+    rt = rtm.Runtime(backend=args.backend, sharding=policy, **geom)
     rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU) vs silent dense fallback
 
     specs = M.param_specs(cfg)
-    pspecs = param_pspecs(specs, mesh)
-    shardings = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs)
+    shardings = policy.param_shardings(specs)
     with mesh, rtm.use(rt):
         params = jax.jit(
             lambda k: init_params(specs, k), out_shardings=shardings
@@ -187,6 +185,16 @@ def main() -> None:
                 if guard.should_save:
                     print("preemption: saved, exiting")
                     return
+    # per-device balance report: how evenly each cached plan's ragged-grid
+    # work would deal across the policy's row-parallel shards
+    n_shards = policy.spmm_axes("M")[1]
+    for ps in rt.plan_cache.plan_stats(shards=n_shards):
+        line = (f"plan key={ps['key']!r} side={ps['side']} "
+                f"total_work={ps['total_work']}/{ps['blocks']} blocks "
+                f"skipped={ps['skipped_fraction']:.0%}")
+        if "imbalance" in ps:
+            line += f" imbalance={ps['imbalance']:.2f}x over {n_shards} devices"
+        print(line)
     print("done")
 
 

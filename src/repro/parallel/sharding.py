@@ -18,6 +18,7 @@ axis; Mamba2's 50280 vocab).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -25,9 +26,13 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.models.common import Spec, axes_tree
+
+# NOTE: repro.models.common is imported lazily below — models/attention.py
+# imports this module for DP/constrain, so a module-level import here turns
+# "import repro.parallel.sharding" before repro.models into a cycle.
 
 __all__ = [
+    "ShardingPolicy",
     "data_axes",
     "param_pspecs",
     "param_shardings",
@@ -89,11 +94,18 @@ def data_axes(mesh: Mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def _pspec_for(spec: Spec, mesh: Mesh) -> P:
+def _is_spec(x) -> bool:
+    from repro.models.common import Spec  # local: import cycle (see header)
+
+    return isinstance(x, Spec)
+
+
+def _pspec_for(spec, mesh: Mesh, rules=None) -> P:
+    rules = LOGICAL_RULES if rules is None else rules
     parts = []
     used = set()
     for dim, ax in zip(spec.shape, spec.axes):
-        rule = LOGICAL_RULES.get(ax) if ax else None
+        rule = rules.get(ax) if ax else None
         if rule is None or rule in used or rule not in mesh.axis_names:
             parts.append(None)
             continue
@@ -105,18 +117,19 @@ def _pspec_for(spec: Spec, mesh: Mesh) -> P:
     return P(*parts)
 
 
-def param_pspecs(specs, mesh: Mesh):
-    """PartitionSpec tree matching a Spec tree."""
+def param_pspecs(specs, mesh: Mesh, rules=None):
+    """PartitionSpec tree matching a Spec tree.  ``rules`` overrides the
+    logical-axis table (default :data:`LOGICAL_RULES`)."""
     return jax.tree.map(
-        lambda s: _pspec_for(s, mesh), specs, is_leaf=lambda x: isinstance(x, Spec)
+        lambda s: _pspec_for(s, mesh, rules), specs, is_leaf=_is_spec
     )
 
 
-def param_shardings(specs, mesh: Mesh):
+def param_shardings(specs, mesh: Mesh, rules=None):
     return jax.tree.map(
-        lambda s: NamedSharding(mesh, _pspec_for(s, mesh)),
+        lambda s: NamedSharding(mesh, _pspec_for(s, mesh, rules)),
         specs,
-        is_leaf=lambda x: isinstance(x, Spec),
+        is_leaf=_is_spec,
     )
 
 
@@ -208,3 +221,93 @@ def logits_pspec(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> P:
     if cfg.frontend == "audio":
         return P(b_ax, None, None, v_ax)
     return P(b_ax, None, v_ax)
+
+
+# ---------------------------------------------------------------------------
+# Declarative sharding policy: the Runtime-carried front door to all of the
+# above (and to the sharded sparse executors in repro.parallel.spmm).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Declarative sharding: mesh + axis roles + the spec tables, one value.
+
+    Replaces the untyped ``Runtime.mesh: Any`` + ambient ``active_mesh()``
+    pair: the policy names which mesh axes are batch/row-parallel
+    (``data_axes``, in mesh order) and which one is tensor-parallel
+    (``model_axis``), carries the logical-axis -> mesh-axis parameter table
+    (``rules``, default :data:`LOGICAL_RULES`, stored as a sorted tuple so
+    the policy stays hashable — ``Runtime`` is a jit-static argument), and
+    fronts every spec helper in this module.  The sharded sparse executors
+    (``repro.parallel.spmm``), ``make_train_step`` and the serve engine all
+    consume this one object instead of re-deriving axis conventions.
+
+    ``mesh=None`` is the single-device policy: every helper degrades to its
+    no-mesh behaviour, so a policy can always be threaded unconditionally.
+    """
+
+    mesh: Any = None
+    data_axes: tuple = DP  # row-parallel (M / batch) axes, mesh order
+    model_axis: str = "model"  # tensor-parallel (N / K) axis
+    rules: Any = None  # logical-axis table; None = LOGICAL_RULES
+
+    def __post_init__(self):
+        if not isinstance(self.data_axes, tuple):
+            object.__setattr__(self, "data_axes", tuple(self.data_axes))
+        if self.rules is not None and not isinstance(self.rules, tuple):
+            object.__setattr__(
+                self, "rules", tuple(sorted(dict(self.rules).items()))
+            )
+
+    def replace(self, **kw) -> "ShardingPolicy":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def rule_table(self) -> dict:
+        return dict(self.rules) if self.rules is not None else dict(LOGICAL_RULES)
+
+    # -- mesh-axis queries (the sharded spmm executors' contract) ----------
+    def spmm_axes(self, axis: str) -> tuple[tuple, int]:
+        """Mesh axes + total shard count backing one spmm shard axis.
+
+        ``"M"`` (row-parallel) shards over the policy's data axes present in
+        the mesh; ``"N"``/``"K"`` (column-/contraction-parallel) over the
+        model axis.  Absent axes drop out, so the count degrades to 1 (run
+        unsharded) on a mesh without them.
+        """
+        if axis not in ("M", "N", "K"):
+            raise ValueError(f"shard axis {axis!r} not in ('M', 'N', 'K')")
+        if self.mesh is None:
+            return (), 1
+        names = self.data_axes if axis == "M" else (self.model_axis,)
+        present = tuple(a for a in names if a in self.mesh.axis_names)
+        size = 1
+        for a in present:
+            size *= self.mesh.shape[a]
+        return present, size
+
+    # -- spec tables, policy-fronted ---------------------------------------
+    def param_pspecs(self, specs):
+        if self.mesh is None:
+            return jax.tree.map(
+                lambda s: P(*([None] * len(s.shape))), specs, is_leaf=_is_spec
+            )
+        return param_pspecs(specs, self.mesh, self.rule_table)
+
+    def param_shardings(self, specs):
+        if self.mesh is None:
+            raise ValueError("param_shardings needs a mesh-backed policy")
+        return param_shardings(specs, self.mesh, self.rule_table)
+
+    def batch_pspecs(self, cfg, shape):
+        return batch_pspecs(cfg, shape, self.mesh)
+
+    def cache_pspecs(self, cfg, shape, cache_tree):
+        return cache_pspecs(cfg, shape, self.mesh, cache_tree)
+
+    def logits_pspec(self, cfg, shape):
+        return logits_pspec(cfg, shape, self.mesh)
+
+    def constrain(self, x, spec: tuple):
+        return constrain(x, self.mesh, spec)

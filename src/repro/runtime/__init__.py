@@ -23,20 +23,26 @@ from repro.runtime.autodiff import (
 from repro.runtime.backends import (
     BackendCapabilityError,
     KernelBackend,
+    KernelRequest,
     available_backends,
     get_backend,
     register_backend,
 )
 from repro.runtime.plan import (
     PlanCache,
+    PlanShards,
     SparsityPlan,
+    balanced_row_order,
     dense_operand_plan,
     plan_from_emitted_mask,
     plan_operand,
+    shard_plan,
+    unshard_plan,
 )
 from repro.runtime.runtime import (
     Runtime,
     active_mesh,
+    active_policy,
     cache_batch_axes,
     current,
     default_runtime,
@@ -50,15 +56,21 @@ __all__ = [
     "current",
     "resolve",
     "active_mesh",
+    "active_policy",
     "default_runtime",
     "cache_batch_axes",
     "KernelBackend",
+    "KernelRequest",
     "BackendCapabilityError",
     "register_backend",
     "get_backend",
     "available_backends",
     "SparsityPlan",
     "PlanCache",
+    "PlanShards",
+    "balanced_row_order",
+    "shard_plan",
+    "unshard_plan",
     "plan_operand",
     "plan_from_emitted_mask",
     "dense_operand_plan",

@@ -83,12 +83,13 @@ class PlannedVJP:
 
     def _execute(self, name, nnz, idx, a, b, *, bm, bk, bn, out_dtype,
                  workqueue=None):
-        from repro.runtime.backends import get_backend  # local: import cycle
+        from repro.runtime.backends import KernelRequest, get_backend  # local: import cycle
 
-        return get_backend(name).execute_planned(
-            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
-            compact_grid=self.compact_grid, workqueue=workqueue,
-        )
+        return get_backend(name).execute_planned(KernelRequest(
+            nnz=nnz, idx=idx, a=a, b=b, bm=bm, bk=bk, bn=bn,
+            out_dtype=out_dtype, compact_grid=self.compact_grid,
+            workqueue=workqueue,
+        ))
 
     def _plan_workqueue(self, plan: SparsityPlan):
         """The plan's CSR triple when the ragged grid will consume it (and
@@ -261,14 +262,14 @@ def fused_planned_matmul(ctx: FusedVJP, nnz, idx, a, b, bias, residual):
     ``(out, mask)`` where ``mask`` is the emitted int8 output block-nonzero
     map.  ``bias``/``residual`` may be ``None`` (empty pytrees — their
     cotangents are then ``None`` too)."""
-    from repro.runtime.backends import get_backend  # local: import cycle
+    from repro.runtime.backends import KernelRequest, get_backend  # local: import cycle
 
-    return get_backend(ctx.backend).execute_fused(
-        nnz, idx, a, b, bias, residual,
+    return get_backend(ctx.backend).execute_fused(KernelRequest(
+        nnz=nnz, idx=idx, a=a, b=b, bias=bias, residual=residual,
         bm=ctx.bm, bk=ctx.bk, bn=ctx.bn,
         activation=ctx.activation, out_dtype=ctx.out_dtype,
         compact_grid=ctx.compact_grid,
-    )
+    ))
 
 
 def _fused_fwd(ctx, nnz, idx, a, b, bias, residual):

@@ -19,6 +19,9 @@ Built-ins:
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any
+
 import jax
 
 from repro.kernels import ref
@@ -36,6 +39,7 @@ from repro.runtime.plan import SparsityPlan, plan_operand
 
 __all__ = [
     "KernelBackend",
+    "KernelRequest",
     "BackendCapabilityError",
     "register_backend",
     "get_backend",
@@ -45,6 +49,43 @@ __all__ = [
 
 class BackendCapabilityError(ValueError):
     """The requested backend cannot run this op (platform / geometry)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRequest:
+    """One planned kernel invocation, as a value.
+
+    The registry's wire format: everything an ``execute_planned`` /
+    ``execute_fused`` call needs — plan metadata, operands, block geometry,
+    the optional fused epilogue, grid family and prebuilt work queue — in a
+    single object.  Adding an execution parameter (per-shard queues today, a
+    quantized epilogue tomorrow) extends this dataclass instead of widening
+    four backends' keyword signatures in lockstep.
+
+    ``bias`` / ``residual`` / ``activation`` only matter to
+    :meth:`KernelBackend.execute_fused`; the planned executors ignore them.
+    ``workqueue`` optionally carries the plan's CSR triple (``row_starts,
+    work_row, work_kblk``) so concrete callers skip the in-graph derivation;
+    ``None`` lets the kernel derive it.  Never hash or compare requests —
+    they hold arrays.
+    """
+
+    nnz: Any  # [Rb] int32 plan metadata
+    idx: Any  # [Rb, Kb] int32 plan metadata
+    a: Any  # left operand [M, K]
+    b: Any  # right operand [K, N]
+    bm: int
+    bk: int
+    bn: int
+    bias: Any = None  # fused epilogue: [N] or None
+    residual: Any = None  # fused epilogue: [M, N] or None
+    activation: str = "none"  # fused epilogue activation
+    out_dtype: Any = None
+    compact_grid: Any = "ragged"
+    workqueue: Any = None  # optional (row_starts, work_row, work_kblk)
+
+    def replace(self, **kw) -> "KernelRequest":
+        return dataclasses.replace(self, **kw)
 
 
 def _all_concrete(*xs) -> bool:
@@ -94,31 +135,30 @@ class KernelBackend:
         """
         raise NotImplementedError
 
-    def execute_planned(self, nnz, idx, a, b, *, bm: int, bk: int, bn: int,
-                        out_dtype=None, compact_grid="ragged", workqueue=None):
+    def execute_planned(self, req: KernelRequest):
         """Primal-only planned ``a @ b`` (no differentiation rule).
 
         This is the raw executor the registry routes — both the forward and
         the two backward products of :func:`repro.runtime.autodiff.planned_matmul`
-        land here.  ``compact_grid`` selects the grid family (``"ragged"``
-        v3 work queue / ``True`` v2 ``max(nnz)`` bound / ``False`` v1 full
-        gated grid) and ``workqueue`` optionally carries the plan's CSR
-        triple; executors that model time rather than steps (dense,
-        reference) execute the identical per-row schedule regardless, so
-        every mode is bit-identical across backends.
+        land here, each as one :class:`KernelRequest`.  ``req.compact_grid``
+        selects the grid family (``"ragged"`` v3 work queue / ``True`` v2
+        ``max(nnz)`` bound / ``False`` v1 full gated grid) and
+        ``req.workqueue`` optionally carries the plan's CSR triple;
+        executors that model time rather than steps (dense, reference)
+        execute the identical per-row schedule regardless, so every mode is
+        bit-identical across backends.
         """
         raise NotImplementedError
 
-    def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm: int, bk: int,
-                      bn: int, activation: str = "none", out_dtype=None,
-                      compact_grid="ragged", workqueue=None):
+    def execute_fused(self, req: KernelRequest):
         """Primal-only planned fused ``act(a @ b + bias) + residual``.
 
         Returns ``(out, mask)`` where ``mask`` is the emitted ``int8
         [Mb, Nb]`` output block-nonzero map (the §3.7 backside scheduler's
         product).  No differentiation rule — the raw executor
         :func:`repro.runtime.autodiff.fused_planned_matmul` routes here.
-        ``compact_grid``/``workqueue`` as in :meth:`execute_planned`.
+        The epilogue rides on ``req.bias`` / ``req.residual`` /
+        ``req.activation``.
         """
         raise NotImplementedError
 
@@ -136,11 +176,12 @@ class KernelBackend:
         XLA hoists loop-invariant plans.
         """
         if _all_concrete(plan.nnz, plan.idx, a, b):
-            return self.execute_planned(
-                plan.nnz, plan.idx, a, b, bm=plan.bm, bk=plan.bk, bn=bn,
+            return self.execute_planned(KernelRequest(
+                nnz=plan.nnz, idx=plan.idx, a=a, b=b,
+                bm=plan.bm, bk=plan.bk, bn=bn,
                 out_dtype=out_dtype, compact_grid=compact_grid,
                 workqueue=plan.workqueue() if compact_grid == "ragged" else None,
-            )
+            ))
         ctx = PlannedVJP(
             backend=self.name, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
             grad_backend=grad_backend, cache=plan_cache, key=plan_key,
@@ -160,12 +201,13 @@ class KernelBackend:
         (ReLU-family epilogues — see :class:`FusedVJP`).
         """
         if _all_concrete(plan.nnz, plan.idx, a, b, bias, residual):
-            return self.execute_fused(
-                plan.nnz, plan.idx, a, b, bias, residual,
-                bm=plan.bm, bk=plan.bk, bn=bn, activation=activation,
+            return self.execute_fused(KernelRequest(
+                nnz=plan.nnz, idx=plan.idx, a=a, b=b,
+                bias=bias, residual=residual, activation=activation,
+                bm=plan.bm, bk=plan.bk, bn=bn,
                 out_dtype=out_dtype, compact_grid=compact_grid,
                 workqueue=plan.workqueue() if compact_grid == "ragged" else None,
-            )
+            ))
         ctx = FusedVJP(
             backend=self.name, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
             grad_backend=grad_backend, cache=plan_cache, key=plan_key,
@@ -192,22 +234,19 @@ class DenseBackend(KernelBackend):
         out = ref.matmul_ref(a, b)
         return out.astype(out_dtype) if out_dtype else out
 
-    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None,
-                        compact_grid="ragged", workqueue=None):
+    def execute_planned(self, req: KernelRequest):
         # the reference executor walks the identical per-row schedule for
         # every grid family — compaction only changes *when* work is issued
-        del compact_grid, workqueue
         return ref.tensordash_matmul_ref(
-            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
+            req.nnz, req.idx, req.a, req.b,
+            bm=req.bm, bk=req.bk, bn=req.bn, out_dtype=req.out_dtype,
         )
 
-    def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm, bk, bn,
-                      activation="none", out_dtype=None, compact_grid="ragged",
-                      workqueue=None):
-        del compact_grid, workqueue
+    def execute_fused(self, req: KernelRequest):
         return ref.tensordash_matmul_fused_ref(
-            nnz, idx, a, b, bias, residual, bm=bm, bk=bk, bn=bn,
-            activation=activation, out_dtype=out_dtype,
+            req.nnz, req.idx, req.a, req.b, req.bias, req.residual,
+            bm=req.bm, bk=req.bk, bn=req.bn,
+            activation=req.activation, out_dtype=req.out_dtype,
         )
 
 
@@ -221,20 +260,18 @@ class ReferenceBackend(KernelBackend):
         plan = plan_operand(a, bm, bk)
         return self.matmul_planned(plan, a, b, bn=bn, out_dtype=out_dtype)
 
-    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None,
-                        compact_grid="ragged", workqueue=None):
-        del compact_grid, workqueue  # same schedule either way (see dense)
+    def execute_planned(self, req: KernelRequest):
+        # same schedule for every grid family (see dense)
         return ref.tensordash_matmul_ref(
-            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype
+            req.nnz, req.idx, req.a, req.b,
+            bm=req.bm, bk=req.bk, bn=req.bn, out_dtype=req.out_dtype,
         )
 
-    def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm, bk, bn,
-                      activation="none", out_dtype=None, compact_grid="ragged",
-                      workqueue=None):
-        del compact_grid, workqueue
+    def execute_fused(self, req: KernelRequest):
         return ref.tensordash_matmul_fused_ref(
-            nnz, idx, a, b, bias, residual, bm=bm, bk=bk, bn=bn,
-            activation=activation, out_dtype=out_dtype,
+            req.nnz, req.idx, req.a, req.b, req.bias, req.residual,
+            bm=req.bm, bk=req.bk, bn=req.bn,
+            activation=req.activation, out_dtype=req.out_dtype,
         )
 
 
@@ -258,22 +295,23 @@ class PallasBackend(KernelBackend):
         plan = plan_operand(a, bm, bk)
         return self.matmul_planned(plan, a, b, bn=bn, out_dtype=out_dtype)
 
-    def execute_planned(self, nnz, idx, a, b, *, bm, bk, bn, out_dtype=None,
-                        compact_grid="ragged", workqueue=None):
+    def execute_planned(self, req: KernelRequest):
         self.check_platform()
         return tensordash_matmul_planned(
-            nnz, idx, a, b, bm=bm, bk=bk, bn=bn, interpret=self.interpret,
-            out_dtype=out_dtype, compact_grid=compact_grid, workqueue=workqueue,
+            req.nnz, req.idx, req.a, req.b,
+            bm=req.bm, bk=req.bk, bn=req.bn, interpret=self.interpret,
+            out_dtype=req.out_dtype, compact_grid=req.compact_grid,
+            workqueue=req.workqueue,
         )
 
-    def execute_fused(self, nnz, idx, a, b, bias, residual, *, bm, bk, bn,
-                      activation="none", out_dtype=None, compact_grid="ragged",
-                      workqueue=None):
+    def execute_fused(self, req: KernelRequest):
         self.check_platform()
         return tensordash_matmul_fused(
-            nnz, idx, a, b, bias, residual, activation=activation,
-            bm=bm, bk=bk, bn=bn, interpret=self.interpret, out_dtype=out_dtype,
-            compact_grid=compact_grid, workqueue=workqueue,
+            req.nnz, req.idx, req.a, req.b, req.bias, req.residual,
+            activation=req.activation,
+            bm=req.bm, bk=req.bk, bn=req.bn, interpret=self.interpret,
+            out_dtype=req.out_dtype, compact_grid=req.compact_grid,
+            workqueue=req.workqueue,
         )
 
 

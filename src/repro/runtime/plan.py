@@ -27,10 +27,14 @@ import numpy as np
 
 __all__ = [
     "SparsityPlan",
+    "PlanShards",
     "PlanCache",
     "plan_operand",
     "plan_from_emitted_mask",
     "dense_operand_plan",
+    "balanced_row_order",
+    "shard_plan",
+    "unshard_plan",
 ]
 
 
@@ -158,6 +162,19 @@ class SparsityPlan:
             "density": self.density(),
         }
 
+    def shard(self, n_shards: int, *, axis: str = "M",
+              balance: bool = True) -> "PlanShards":
+        """This plan split into ``n_shards`` per-shard work queues
+        (:func:`shard_plan`), memoized host-side per ``(n_shards, axis,
+        balance)`` — one split amortized over every stats/report query.
+        Concrete plans only (tracers raise via :meth:`host_nnz`)."""
+        key = ("shards", n_shards, axis, balance)
+        if key not in self._host:
+            self._host[key] = shard_plan(
+                self, n_shards, axis=axis, balance=balance
+            )
+        return self._host[key]
+
 
 def plan_operand(a, bm: int, bk: int, *, side: str = "A") -> SparsityPlan:
     """Plan a 2-D operand (already transposed for ``side="B"``).
@@ -220,6 +237,198 @@ def dense_operand_plan(shape, dtype, *, bm: int, bk: int, side: str = "A") -> Sp
     return SparsityPlan(
         nnz=nnz, idx=idx, bm=bm, bk=bk, shape=(m, k), dtype=dtype, side=side,
         row_starts=row_starts, work_row=work_row, work_kblk=work_kblk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Plan sharding: per-shard ragged work queues for shard_map execution.
+# ---------------------------------------------------------------------------
+
+
+def balanced_row_order(nnz, n_shards: int):
+    """Serpentine-balanced block-row order for an M-sharded plan.
+
+    Rows sorted by descending work (``max(nnz, 1)``) are dealt boustrophedon
+    across ``n_shards`` — shard ``s`` takes position ``s`` on even rounds and
+    ``n_shards-1-s`` on odd ones — so every shard gets exactly ``Rb /
+    n_shards`` rows (uniform ``shard_map`` shapes) with near-equal total
+    work: after round ``2t`` every shard holds the same number of rows and
+    the pairwise work gap is bounded by one row of round ``2t-1``.  Returns
+    the ``[Rb] int32`` order, *shard-major*: shard ``s`` owns
+    ``order[s*r:(s+1)*r]``.  Pure ``jnp`` metadata ops, so the identical
+    assignment is computable host-side (concrete plans) and in-graph
+    (traced cotangent plans inside ``jit``/``grad``) — what keeps the
+    sharded backward bit-identical to the host-side split the tests oracle
+    against.  Reordering block rows is pure data movement: each row's
+    schedule travels with it, so execution stays bitwise regardless of the
+    assignment.
+    """
+    import jax.numpy as jnp  # local: keep module import light
+
+    nnz = jnp.asarray(nnz)
+    (rb,) = nnz.shape
+    if rb % n_shards:
+        raise ValueError(f"{rb} block rows not divisible by {n_shards} shards")
+    work = jnp.maximum(nnz, 1)
+    by_work = jnp.argsort(-work, stable=True).astype(jnp.int32)
+    rounds = rb // n_shards
+    s = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
+    r = jnp.arange(rounds, dtype=jnp.int32)[None, :]
+    pos = r * n_shards + jnp.where(r % 2 == 0, s, n_shards - 1 - s)
+    return by_work[pos.reshape(-1)]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanShards:
+    """A :class:`SparsityPlan` split into per-shard ragged work queues.
+
+    ``nnz``/``idx``/``row_starts``/``work_row``/``work_kblk`` carry a leading
+    shard dim (numpy, host-side — every executor accepts numpy metadata, the
+    ``dense_plan_csr`` precedent).  Per axis:
+
+    * ``"M"`` (row-parallel): block rows are dealt to shards by ``order``
+      (serpentine-balanced when ``balance``, else contiguous); shard ``s``
+      owns rows ``order[s*r:(s+1)*r]`` with their global K indices intact.
+    * ``"N"`` (column-parallel): the schedule is replicated — every shard
+      walks the full queue against its own output-column slice.
+    * ``"K"`` (contraction-parallel): each shard replans its K-block slice
+      (local indices, rebased to the slice) from the expanded block mask.
+    """
+
+    plan: SparsityPlan
+    axis: str
+    n_shards: int
+    order: Any  # [Rb] int32 block-row assignment (shard-major; M only)
+    nnz: Any  # [S, rows]
+    idx: Any  # [S, rows, Kb_local]
+    row_starts: Any  # [S, rows+1]
+    work_row: Any  # [S, rows*Kb_local]
+    work_kblk: Any
+
+    def shard_work(self) -> np.ndarray:
+        """Per-shard ragged-grid steps per N block: ``sum(max(nnz, 1))``."""
+        return np.maximum(np.asarray(self.nnz), 1).sum(axis=1)
+
+    def imbalance(self) -> float:
+        """Max-over-mean of :meth:`shard_work` — 1.0 is a perfect balance;
+        the naive contiguous / global-max split's figure of demerit."""
+        w = self.shard_work()
+        return float(w.max() / w.mean())
+
+    def stats(self) -> dict:
+        w = self.shard_work()
+        return {
+            "axis": self.axis,
+            "n_shards": self.n_shards,
+            "shard_work": [int(x) for x in w],
+            "imbalance": self.imbalance(),
+            "total_work": int(w.sum()),
+        }
+
+
+def _plan_block_mask_np(nnz: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Expand compacted ``(nnz, idx)`` back to the bool ``[Rb, Kb]`` block
+    mask (the tail's repeated indices are excluded by the ``nnz`` bound)."""
+    rb, kb = idx.shape
+    valid = np.arange(kb, dtype=np.int64)[None, :] < nnz[:, None]
+    rows = np.broadcast_to(np.arange(rb, dtype=np.int64)[:, None], idx.shape)
+    mask = np.zeros((rb, kb), bool)
+    mask[rows[valid], idx[valid]] = True
+    return mask
+
+
+def shard_plan(plan: SparsityPlan, n_shards: int, *, axis: str = "M",
+               balance: bool = True) -> PlanShards:
+    """Split ``plan`` into ``n_shards`` per-shard work queues (host-side).
+
+    Each shard's CSR queue is rebuilt from *its own* rows/columns —
+    ``row_starts[s][-1]`` is exactly that shard's ragged-grid steps per N
+    block, ``O(sum(nnz_shard))``, which is what makes per-device load track
+    local effectual work instead of the global ``max(nnz)``.  ``balance``
+    (M axis) deals rows serpentine by descending work
+    (:func:`balanced_row_order`); ``False`` keeps the naive contiguous
+    split, the imbalance baseline the benchmarks measure against.
+    Concrete plans only — the in-graph twin lives in
+    ``repro.parallel.spmm`` (same assignment, same numerics).
+    """
+    from repro.sparse_train.plan_edit import (  # local: import cycle
+        _mask_to_plan_np, _workqueue_np,
+    )
+
+    if axis not in ("M", "N", "K"):
+        raise ValueError(f"shard axis {axis!r} not in ('M', 'N', 'K')")
+    nnz = plan.host_nnz().astype(np.int32)
+    idx = np.asarray(plan.idx, dtype=np.int32)
+    rb, kb = idx.shape
+    order = np.arange(rb, dtype=np.int32)
+    if axis == "M":
+        if rb % n_shards:
+            raise ValueError(
+                f"{rb} block rows not divisible by {n_shards} shards"
+            )
+        if balance:
+            order = np.asarray(balanced_row_order(nnz, n_shards))
+        rows = rb // n_shards
+        nnz_s = nnz[order].reshape(n_shards, rows)
+        idx_s = idx[order].reshape(n_shards, rows, kb)
+    elif axis == "N":
+        # output columns shard; the schedule replicates to every shard
+        nnz_s = np.broadcast_to(nnz, (n_shards, rb)).copy()
+        idx_s = np.broadcast_to(idx, (n_shards, rb, kb)).copy()
+    else:  # K: rebase each shard's plan to its K-block slice
+        if kb % n_shards:
+            raise ValueError(
+                f"{kb} K blocks not divisible by {n_shards} shards"
+            )
+        kbl = kb // n_shards
+        mask = _plan_block_mask_np(nnz, idx)
+        parts = [
+            _mask_to_plan_np(mask[:, s * kbl:(s + 1) * kbl])
+            for s in range(n_shards)
+        ]
+        nnz_s = np.stack([p[0] for p in parts])
+        idx_s = np.stack([p[1] for p in parts])
+    queues = [_workqueue_np(nnz_s[s], idx_s[s]) for s in range(n_shards)]
+    return PlanShards(
+        plan=plan, axis=axis, n_shards=n_shards, order=order,
+        nnz=nnz_s, idx=idx_s,
+        row_starts=np.stack([q[0] for q in queues]),
+        work_row=np.stack([q[1] for q in queues]),
+        work_kblk=np.stack([q[2] for q in queues]),
+    )
+
+
+def unshard_plan(shards: PlanShards) -> SparsityPlan:
+    """Reassemble the global plan from its shards — the exact inverse of
+    :func:`shard_plan` (bit-identical metadata, pinned by the round-trip
+    test).  Queues are rebuilt from the merged schedule."""
+    from repro.sparse_train.plan_edit import (  # local: import cycle
+        _mask_to_plan_np, _workqueue_np,
+    )
+
+    src = shards.plan
+    if shards.axis == "N":
+        nnz, idx = np.asarray(shards.nnz[0]), np.asarray(shards.idx[0])
+    elif shards.axis == "M":
+        rb = shards.order.shape[0]
+        kb = shards.idx.shape[-1]
+        nnz = np.empty((rb,), np.int32)
+        idx = np.empty((rb, kb), np.int32)
+        nnz[shards.order] = shards.nnz.reshape(rb)
+        idx[shards.order] = shards.idx.reshape(rb, kb)
+    else:  # K: splice per-shard local masks back into global columns
+        s_, rb, kbl = shards.idx.shape
+        mask = np.zeros((rb, s_ * kbl), bool)
+        for s in range(s_):
+            mask[:, s * kbl:(s + 1) * kbl] = _plan_block_mask_np(
+                np.asarray(shards.nnz[s]), np.asarray(shards.idx[s])
+            )
+        nnz, idx = _mask_to_plan_np(mask)
+    rs, wr, wk = _workqueue_np(nnz, idx)
+    return SparsityPlan(
+        nnz=nnz, idx=idx, bm=src.bm, bk=src.bk, shape=src.shape,
+        dtype=src.dtype, side=src.side,
+        row_starts=rs, work_row=wr, work_kblk=wk,
     )
 
 
@@ -297,19 +506,28 @@ class PlanCache:
             "traced": self.traced,
         }
 
-    def plan_stats(self) -> list[dict]:
+    def plan_stats(self, shards: int | None = None) -> list[dict]:
         """Per-plan work summary for every live entry (LRU order, coldest
         first): the v3 ragged-grid ``total_work`` and the skipped fraction,
         so production traces can observe per-operand *skew*, not just hit
         rates.  Cached entries are always concrete, so the host-side stats
-        never sync mid-trace."""
+        never sync mid-trace.
+
+        With ``shards`` (a device count), every plan whose block rows divide
+        it additionally reports the M-sharded split: per-shard ``total_work``
+        (``shard_work``, the exact per-device ragged-grid steps per N block),
+        the per-shard skipped fractions, and the ``imbalance`` ratio
+        (max/mean) under the serpentine-balanced deal — the number the
+        distributed launchers surface per device.  Plans with indivisible
+        row counts report global aggregates only, mirroring the executor's
+        replicate-don't-split fallback."""
         out = []
         for (key, side, *_rest), (_, plan) in self._entries.items():
             # shape/block come from the plan itself: identity-anchored
             # backward entries (autodiff's transposed-plan cache) key on the
             # idx metadata array, whose shape is the block grid, not the
             # operand
-            out.append({
+            entry = {
                 "key": key,
                 "side": side,
                 "shape": plan.shape,
@@ -317,7 +535,18 @@ class PlanCache:
                 "blocks": plan.total_blocks,
                 "total_work": plan.total_work(),
                 "skipped_fraction": plan.skipped_fraction(),
-            })
+            }
+            if shards and shards > 1 and plan.block_rows % shards == 0:
+                ps = plan.shard(shards)
+                per_shard = ps.shard_work()
+                blocks_per_shard = plan.total_blocks / shards
+                entry["shard_work"] = [int(w) for w in per_shard]
+                entry["shard_skipped"] = [
+                    1.0 - float(n.sum()) / blocks_per_shard
+                    for n in np.asarray(ps.nnz)
+                ]
+                entry["imbalance"] = ps.imbalance()
+            out.append(entry)
         return out
 
     def clear(self) -> None:

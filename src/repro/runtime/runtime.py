@@ -31,12 +31,16 @@ import contextlib
 import contextvars
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.runtime.backends import KernelBackend, get_backend
+
+if False:  # import-time cycle (sharding -> models -> runtime); type-only
+    from repro.parallel.sharding import ShardingPolicy
 from repro.runtime.plan import (
     PlanCache,
     SparsityPlan,
@@ -51,6 +55,7 @@ __all__ = [
     "current",
     "resolve",
     "active_mesh",
+    "active_policy",
     "default_runtime",
     "cache_batch_axes",
 ]
@@ -79,6 +84,13 @@ class Runtime:
     skew-immune); ``True`` (v2) bounds the K grid by the per-call
     ``max(nnz)`` (one dense row drags all rows to dense cost); ``False``
     (v1) issues the full gated grid — kept for A/B measurement.
+
+    ``sharding`` is the declarative
+    :class:`~repro.parallel.sharding.ShardingPolicy` — mesh, axis roles and
+    parameter spec tables in one value; ``None`` means single-device.  The
+    old untyped ``mesh=`` field is a one-release deprecation shim: passing
+    it warns and wraps the mesh in a default policy, and :attr:`mesh` reads
+    back ``sharding.mesh``.
     """
 
     backend: str = "dense"
@@ -86,7 +98,7 @@ class Runtime:
     bk: int = 512
     bn: int = 128
     compact_grid: Any = "ragged"
-    mesh: Any = None
+    sharding: ShardingPolicy | None = None
     plan_cache: PlanCache = dataclasses.field(
         default_factory=PlanCache, compare=False, repr=False
     )
@@ -106,6 +118,12 @@ class Runtime:
 
     def replace(self, **kw) -> "Runtime":
         return dataclasses.replace(self, **kw)
+
+    @property
+    def mesh(self):
+        """Deprecated read-alias for ``sharding.mesh`` (one-release shim —
+        construct with ``sharding=ShardingPolicy(mesh=...)``)."""
+        return self.sharding.mesh if self.sharding is not None else None
 
     @property
     def kernel(self) -> KernelBackend:
@@ -313,6 +331,77 @@ class Runtime:
         )
         return planned_matmul_grads(ctx, plan.nnz, plan.idx, a, b, g)
 
+    def matmul_sharded(self, a, b, *, axis: str = "M",
+                       plan: SparsityPlan | None = None, plan_key=None,
+                       balance: bool = True):
+        """Distributed planned ``a @ b`` over :attr:`sharding`'s mesh.
+
+        The plan is split into *per-shard* ragged work queues under
+        ``shard_map`` (``repro.parallel.spmm``), so each device's grid is
+        ``O(sum(nnz_shard))``.  ``axis`` picks the distribution: ``"M"``
+        (row-parallel over the policy's data axes — ``a``'s block rows are
+        dealt serpentine by work when ``balance``), ``"N"`` (column-parallel
+        over the model axis; schedule replicated) or ``"K"``
+        (contraction-parallel with a psum).  M/N keep every contraction
+        device-local and are bit-identical to :meth:`matmul`; K
+        reassociates the accumulation (allclose, not bitwise).
+        Differentiable on M/N: both backward products ride per-shard queues
+        — the cotangent plan M-sharded over its rows, the transposed
+        weight-gradient plan along the conjugate N axis.  Degrades to
+        :meth:`matmul` without a mesh-backed policy or when shapes don't
+        divide the shard count.
+        """
+        from repro.parallel import spmm  # local: avoid import cycle
+
+        policy = self.sharding
+        if policy is None or policy.mesh is None:
+            return self.matmul(a, b, plan=plan, plan_key=plan_key)
+        a, b = self._dtype_prologue(a, b)
+        rt = self if plan is not None else self.fit(a.shape, b.shape)
+        if plan is None:
+            rt.kernel.check_platform()
+            plan = rt.plan(a, key=plan_key)
+        return spmm.sharded_matmul(
+            plan, a, b, bn=_fit_block(rt.bn, b.shape[1]),
+            backend=self.backend, policy=policy, axis=axis, balance=balance,
+            out_dtype=a.dtype, plan_cache=self.plan_cache,
+            plan_key=("A", plan_key), compact_grid=self.compact_grid,
+        )
+
+    def matmul_fused_sharded(self, a, b, *, bias=None, residual=None,
+                             activation: str = "none", axis: str = "M",
+                             plan: SparsityPlan | None = None, plan_key=None,
+                             assume_dense: bool = False, balance: bool = True):
+        """Distributed :meth:`matmul_fused` — ``act(a @ b + bias) +
+        residual`` under ``shard_map``, returning ``(out, mask)`` with the
+        emitted mask in the global layout.  ``axis`` as in
+        :meth:`matmul_sharded` (``"K"`` is refused for fused epilogues: the
+        nonlinearity cannot distribute over the psum).  Degrades to
+        :meth:`matmul_fused` without a mesh-backed policy."""
+        from repro.parallel import spmm  # local: avoid import cycle
+
+        policy = self.sharding
+        if policy is None or policy.mesh is None:
+            return self.matmul_fused(
+                a, b, bias=bias, residual=residual, activation=activation,
+                plan=plan, plan_key=plan_key, assume_dense=assume_dense,
+            )
+        a, b = self._dtype_prologue(a, b)
+        rt = self if plan is not None else self.fit(a.shape, b.shape)
+        rt.kernel.check_platform()
+        if plan is None:
+            if assume_dense:
+                plan = dense_operand_plan(a.shape, a.dtype, bm=rt.bm, bk=rt.bk)
+            else:
+                plan = rt.plan(a, key=plan_key)
+        return spmm.sharded_matmul_fused(
+            plan, a, b, bias=bias, residual=residual, activation=activation,
+            bn=_fit_block(rt.bn, b.shape[1]), backend=self.backend,
+            policy=policy, axis=axis, balance=balance, out_dtype=a.dtype,
+            plan_cache=self.plan_cache, plan_key=("A", plan_key),
+            compact_grid=self.compact_grid,
+        )
+
     def sparse_ffn(self, x, w1, w2, *, activation: str = "relu"):
         """FFN whose second matmul exploits the activation sparsity the
         first one produced (the framework's main kernel consumer).
@@ -398,6 +487,37 @@ class Runtime:
         return jax.tree.map(place, caches, part, axes)
 
 
+# --- one-release deprecation shim: Runtime(mesh=...) -----------------------
+# ``mesh`` is no longer a dataclass field (the property above reads
+# ``sharding.mesh``), so the generated __init__ is wrapped to accept the old
+# keyword, warn, and fold the mesh into a default ShardingPolicy.
+# ``dataclasses.replace`` re-invokes __init__ with field names only, so
+# replace() never re-warns.
+
+_MESH_UNSET = object()
+_dataclass_init = Runtime.__init__
+
+
+@functools.wraps(_dataclass_init)
+def _init_with_mesh_shim(self, *args, mesh=_MESH_UNSET, **kw):
+    if mesh is not _MESH_UNSET and mesh is not None:
+        warnings.warn(
+            "Runtime(mesh=...) is deprecated; pass "
+            "sharding=ShardingPolicy(mesh=...) "
+            "(from repro.parallel.sharding) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if kw.get("sharding") is None:
+            from repro.parallel.sharding import ShardingPolicy  # local: import cycle
+
+            kw["sharding"] = ShardingPolicy(mesh=mesh)
+    _dataclass_init(self, *args, **kw)
+
+
+Runtime.__init__ = _init_with_mesh_shim
+
+
 @functools.lru_cache(maxsize=None)
 def cache_batch_axes(cfg):
     """Per-leaf batch-axis index of ``cfg``'s decode-cache tree.
@@ -459,3 +579,17 @@ def active_mesh(mesh=None):
         return mesh
     ambient = _ACTIVE.get()
     return ambient.mesh if ambient is not None else None
+
+
+def active_policy(policy: ShardingPolicy | None = None) -> ShardingPolicy:
+    """Explicit policy if given, else the ambient runtime's; a default
+    (mesh-less) :class:`~repro.parallel.sharding.ShardingPolicy` when
+    neither exists, so callers can thread one unconditionally."""
+    if policy is not None:
+        return policy
+    ambient = _ACTIVE.get()
+    if ambient is not None and ambient.sharding is not None:
+        return ambient.sharding
+    from repro.parallel.sharding import ShardingPolicy  # local: import cycle
+
+    return ShardingPolicy()

@@ -429,7 +429,10 @@ def generate(
     """
     rt = rtm.resolve(rt)
     if mesh is not None:
-        rt = rt.replace(mesh=mesh)
+        from repro.parallel.sharding import ShardingPolicy  # local: import cycle
+
+        policy = rt.sharding or ShardingPolicy()
+        rt = rt.replace(sharding=policy.replace(mesh=mesh))
     prompt_tokens = jnp.asarray(prompt_tokens, jnp.int32)
     b, s = prompt_tokens.shape
     max_len = max_len or (s + max_new)

@@ -28,7 +28,6 @@ from repro import runtime as rtm
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.optim.adamw import OptConfig, apply_updates, global_norm, init_opt_state
-from repro.parallel.sharding import param_pspecs
 
 __all__ = ["make_train_step", "make_loss_fn", "init_train_state", "modeled_speedup"]
 
@@ -138,7 +137,8 @@ def make_train_step(
     refreshes — regrown blocks restart from zero, no straight-through
     estimator needed.
     """
-    mesh = rtm.active_mesh()
+    policy = rtm.active_policy()
+    mesh = policy.mesh
     loss_fn = _make_loss(cfg, mesh)
     dst_spec = None
     if dynamic_sparsity is not None:
@@ -158,13 +158,10 @@ def make_train_step(
         # backward boundary so the partitioner can shard the reduction
         if mesh is None:
             return grads
-        from jax.sharding import NamedSharding
-
-        specs = param_pspecs(M.param_specs(cfg), mesh)
         return jax.tree.map(
-            lambda g, p: jax.lax.with_sharding_constraint(g, NamedSharding(mesh, p)),
+            jax.lax.with_sharding_constraint,
             grads,
-            specs,
+            policy.param_shardings(M.param_specs(cfg)),
         )
 
     def _zero_probes(batch):

@@ -1,0 +1,13 @@
+"""Force an 8-device host platform for the whole suite.
+
+``XLA_FLAGS`` must be set before the jax backend initialises, and pytest
+imports this conftest before any test module — so the sharded executor tests
+(``test_sharded_spmm.py``) see a real 8-device mesh while every other module
+keeps passing unchanged (device count only adds devices; nothing shards
+unless a test builds a mesh).
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()

@@ -302,11 +302,46 @@ def test_legacy_shims_are_gone():
 
 
 def test_ambient_mesh_resolution():
+    from repro.parallel.sharding import ShardingPolicy
+
     assert rtm.active_mesh(None) is None
     sentinel = object()
-    with rtm.use(Runtime(mesh=sentinel)):
+    with rtm.use(Runtime(sharding=ShardingPolicy(mesh=sentinel))):
         assert rtm.active_mesh(None) is sentinel
         assert rtm.active_mesh("explicit") == "explicit"
+
+
+def test_ambient_policy_resolution():
+    from repro.parallel.sharding import ShardingPolicy
+
+    # no ambient runtime: a fresh single-device policy
+    assert rtm.active_policy().mesh is None
+    pol = ShardingPolicy(mesh=object())
+    assert rtm.active_policy(pol) is pol  # explicit wins
+    with rtm.use(Runtime(sharding=pol)):
+        assert rtm.active_policy() is pol
+        other = ShardingPolicy()
+        assert rtm.active_policy(other) is other
+
+
+def test_mesh_kwarg_deprecation_shim():
+    """``Runtime(mesh=...)`` warns exactly once per construction and lands
+    the mesh in an auto-built ShardingPolicy; ``replace`` never re-warns."""
+    sentinel = object()
+    with pytest.warns(DeprecationWarning, match="Runtime.mesh=.* is deprecated"):
+        rt = Runtime(mesh=sentinel)
+    assert rt.mesh is sentinel
+    assert rt.sharding is not None and rt.sharding.mesh is sentinel
+    with rtm.use(rt):
+        assert rtm.active_mesh(None) is sentinel
+    # dataclasses.replace goes through the real fields only: no warning
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        rt2 = rt.replace(bn=32)
+        Runtime(mesh=None)  # explicit None is a no-op, not a deprecation
+    assert rt2.mesh is sentinel
 
 
 # ---------------------------------------------------------------------------
