@@ -488,6 +488,58 @@ def bench_ffn_fused():
     )
 
 
+def bench_plan_verify():
+    """Cost of ``Runtime(validate=...)``: the plan_cache_micro hot path
+    under ``validate="boundary"`` vs ``"off"`` (cache hits are never
+    re-verified, so the steady-state overhead must stay <5%), plus the
+    per-store cost of one ``verify_plan`` call at each level — the number
+    the README's decision table quotes.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis import verify_plan
+    from repro.runtime import Runtime
+
+    rng = np.random.default_rng(0)
+    m, k, n, bm, bk, bn = 8, 256, 512, 8, 32, 32
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    wmask = rng.random((n // bn, k // bk)) < 0.3  # 70% block-pruned weight
+    w = jnp.asarray((w.T.reshape(n // bn, bn, k // bk, bk) * wmask[:, None, :, None])
+                    .reshape(n, k).T)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    # independent runtimes: each owns its cache, so the validate level set
+    # at construction is the one its stores ran under
+    rt_off = Runtime(backend="dense", bm=bm, bk=bk, bn=bn, validate="off")
+    rt_val = Runtime(backend="dense", bm=bm, bk=bk, bn=bn, validate="boundary")
+    for rt in (rt_off, rt_val):
+        rt.matmul(x, w, plan_key="w", side="B").block_until_ready()  # plan+store
+    t_off = _best_of(lambda: rt_off.matmul(x, w, plan_key="w", side="B").block_until_ready())
+    t_val = _best_of(lambda: rt_val.matmul(x, w, plan_key="w", side="B").block_until_ready())
+    ratio = t_val / max(t_off, 1e-9)
+
+    plan = rt_val.plan(w, side="B")
+    assert verify_plan(plan) == []  # the shipped planner verifies clean
+    t_boundary = _best_of(lambda: verify_plan(plan, level="boundary"))
+    t_full = _best_of(lambda: verify_plan(plan, level="full"))
+    if ratio > 1.05:  # the gate; re-measure once before failing on noise
+        t_off = min(t_off, _best_of(
+            lambda: rt_off.matmul(x, w, plan_key="w", side="B").block_until_ready()))
+        t_val = min(t_val, _best_of(
+            lambda: rt_val.matmul(x, w, plan_key="w", side="B").block_until_ready()))
+        ratio = t_val / max(t_off, 1e-9)
+        if ratio > 1.05:
+            raise RuntimeError(
+                f"validate='boundary' hot path {ratio:.3f}x over 'off' "
+                f"(gate: <1.05x)"
+            )
+    return t_val, (
+        f"hot_off={t_off:.0f}us hot_boundary={t_val:.0f}us "
+        f"overhead={ratio - 1:+.1%} (gate <5%) "
+        f"verify_boundary={t_boundary:.0f}us verify_full={t_full:.0f}us"
+    )
+
+
 def bench_backward_planned():
     """Microbenchmark: the sparsity-aware backward — both gradient products
     (Eq. 2 W*G, Eq. 3 A*G) planned + executed through the backend registry,
@@ -724,6 +776,7 @@ BENCHES = [
     ("sharded_spmm_micro", bench_sharded_spmm),
     ("ffn_fused_micro", bench_ffn_fused),
     ("plan_cache_micro", bench_plan_cache),
+    ("plan_verify_micro", bench_plan_verify),
     ("backward_planned_micro", bench_backward_planned),
     ("serve_decode_micro", bench_serve_decode),
     ("dst_train_micro", bench_dst_train),
@@ -738,6 +791,7 @@ SMOKE = {
     "sharded_spmm_micro",
     "ffn_fused_micro",
     "plan_cache_micro",
+    "plan_verify_micro",
     "backward_planned_micro",
     "serve_decode_micro",
     "dst_train_micro",

@@ -1,0 +1,46 @@
+"""Static analysis for the sparse execution stack.
+
+Three cooperating passes, none of which runs a kernel:
+
+* :mod:`repro.analysis.plan_check` — ``verify_plan``: prove a
+  :class:`~repro.runtime.plan.SparsityPlan`'s CSR metadata self-consistent
+  (``row_starts == cumsum(max(nnz, 1))``, queue contents derivable from
+  ``(nnz, idx)``, indices sorted/unique/in-bounds) in O(entries) host numpy.
+  ``Runtime(validate="boundary"|"full")`` wires it into every
+  ``PlanCache.store`` and ``edit_plan``.
+* :mod:`repro.analysis.grid_check` — abstract interpretation of the Pallas
+  grids: enumerate each kernel family's grid against its BlockSpec index
+  maps and prove in-bounds access, store-exactly-once per output tile, and
+  zero-before-accumulate at ``row_starts`` boundaries.
+* :mod:`repro.analysis.lint` — a repo-specific AST linter
+  (``python -m repro.analysis.lint src/``) for the pitfalls this codebase
+  has actually hit: host syncs in launch/report paths, ``np.*`` on device
+  values, tracer leaks into host-side plan stats, dropped ``workqueue=``
+  passthroughs, and ``shard_map`` pspecs not derived from
+  ``ShardingPolicy.spmm_axes()``.
+
+The paper's correctness story (§3.7) is that a schedule is valid iff every
+effectual MAC lands exactly once; these passes decide that statically on
+the plan metadata instead of by running the kernel and diffing.
+"""
+from repro.analysis.grid_check import check_grid, check_plan_grid, check_sharded
+from repro.analysis.plan_check import (
+    Finding,
+    PlanVerificationError,
+    check_plan,
+    verify_plan,
+    verify_shards,
+    verify_transpose,
+)
+
+__all__ = [
+    "Finding",
+    "PlanVerificationError",
+    "verify_plan",
+    "verify_transpose",
+    "verify_shards",
+    "check_plan",
+    "check_grid",
+    "check_plan_grid",
+    "check_sharded",
+]

@@ -1,0 +1,6 @@
+"""``python -m repro.analysis``: the verifier's non-vacuity self-check
+(a clean plan verifies clean; seeded corruptions are caught).  CI runs this
+alongside ``python -m repro.analysis.lint src/``."""
+from repro.analysis.plan_check import _selfcheck
+
+raise SystemExit(_selfcheck())

@@ -1,0 +1,278 @@
+"""Abstract interpretation of the planned Pallas grids.
+
+The kernels in :mod:`repro.kernels.tensordash_spmm` are correct only if the
+grid + BlockSpec index maps + ``pl.when`` predicates compose into a valid
+schedule: every block access in bounds, every output tile stored exactly
+once, and the accumulator zeroed before a row's first accumulate.  This
+module re-enacts those predicates symbolically — walking the v3 work queue
+(or the v1/v2 ``(Mb, Nb, kdim)`` grid) in host numpy and replaying exactly
+the index arithmetic of ``_ragged_grid_and_maps`` / ``_grid_and_maps`` and
+the ``t == row_starts[m]`` / ``k_i == 0`` / store-step conditions of the
+kernels — so an off-by-one in queue construction is caught without a TPU or
+an interpret-mode run.
+
+Checks per grid family:
+
+* **v3 ragged** ``(Nb, total_work)``: every queue step lies inside its
+  row's CSR segment (else the zero/store predicates misfire and the
+  accumulator carries stale partial sums), the dereferenced ``(work_row[t],
+  work_kblk[t])`` tile indices are in bounds for the ``a``/``b``/``o``
+  index maps, each all-zero row contributes exactly one gated zero-fill
+  step, and the multiset of MAC'd blocks equals the plan's effectual set —
+  nothing dropped (``grid.work-missing``), nothing double-accumulated
+  (``grid.work-dup``).
+* **v1/v2** ``(Mb, Nb, kdim)``: the compacted K bound covers every row's
+  ``nnz`` (an undersized bound silently drops that row's last MACs), the
+  ``idx`` dereference stays in bounds across the *whole* ``kdim`` range
+  (gated tail steps still prefetch a block), the effectual prefix is
+  duplicate-free, and ``kdim >= 1`` so the store step exists.
+
+The N grid dimension multiplies every output tile uniformly and cannot
+change validity, so ``nb`` only scales the reported store counts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.plan_check import Finding, _host
+
+__all__ = ["check_grid", "check_plan_grid", "check_sharded"]
+
+
+def _check_ragged(nnz, idx, workqueue, where: tuple) -> list[Finding]:
+    f: list[Finding] = []
+    rb, kb = idx.shape
+    rs, wr, wk = (np.asarray(x).astype(np.int64) for x in workqueue)
+    if rs.shape != (rb + 1,) or int(rs[0]) != 0 or np.any(np.diff(rs) < 1):
+        f.append(Finding(
+            "grid.queue-shape",
+            "row_starts is not a monotone [Rb+1] offset table starting at 0",
+            where,
+        ))
+        return f
+    total = int(rs[-1])
+    if total > wr.shape[0] or total > wk.shape[0]:
+        f.append(Finding(
+            "grid.queue-shape",
+            f"total_work={total} exceeds the queue arrays "
+            f"({wr.shape[0]}, {wk.shape[0]})",
+            where,
+        ))
+        return f
+    wr, wk = wr[:total], wk[:total]
+    t = np.arange(total, dtype=np.int64)
+
+    # a_map(t) = (wr[t], wk[t]); b_map(t) = (wk[t], n); o_map(t) = (wr[t], n)
+    if np.any((wr < 0) | (wr >= rb)):
+        f.append(Finding(
+            "grid.a-oob",
+            f"work_row dereferences block rows outside [0, {rb})", where,
+        ))
+        return f
+    if np.any((wk < 0) | (wk >= kb)):
+        f.append(Finding(
+            "grid.b-oob",
+            f"work_kblk dereferences K blocks outside [0, {kb})", where,
+        ))
+        return f
+
+    # the kernel zeroes at t == rs[m] and stores at t == rs[m+1] - 1, so a
+    # step outside its row's CSR segment accumulates into a stale (or
+    # never-zeroed) accumulator and may never store
+    seg_ok = (t >= rs[wr]) & (t < rs[wr + 1])
+    if not np.all(seg_ok):
+        bad = int(t[~seg_ok][0])
+        f.append(Finding(
+            "grid.zero-order",
+            f"queue step {bad} (row {int(wr[bad])}) lies outside its row's "
+            f"CSR segment — the accumulator is not zeroed before it "
+            f"accumulates",
+            where,
+        ))
+        return f
+    # within-segment, the zero step is each row's first step and the store
+    # step its last; validity reduces to each row owning exactly its segment
+    counts = np.bincount(wr, minlength=rb)
+    want = np.maximum(nnz.astype(np.int64), 1)
+    if not np.array_equal(counts, want):
+        f.append(Finding(
+            "grid.store-count",
+            "per-row queue step counts != max(nnz, 1): some output tile is "
+            "stored zero or multiple times",
+            where,
+        ))
+        return f
+
+    # effectual coverage: the MAC'd multiset must equal the plan's effectual
+    # set (rows with nnz == 0 issue a single gated zero-fill step, no MAC)
+    mac = nnz[wr] > 0
+    got = np.sort(wr[mac] * kb + wk[mac])
+    cols = np.arange(kb, dtype=np.int64)[None, :]
+    valid = cols < nnz[:, None]
+    rows = np.broadcast_to(np.arange(rb, dtype=np.int64)[:, None], idx.shape)
+    want_keys = np.sort(rows[valid] * kb + idx[valid].astype(np.int64))
+    if not np.array_equal(got, want_keys):
+        missing = np.setdiff1d(want_keys, got).size
+        extra = got.size - np.intersect1d(got, want_keys).size
+        dup = got.size - np.unique(got).size
+        if dup or extra:
+            f.append(Finding(
+                "grid.work-dup",
+                f"{max(dup, extra)} MAC(s) double-accumulated or not in the "
+                f"plan's effectual set",
+                where,
+            ))
+        if missing:
+            f.append(Finding(
+                "grid.work-missing",
+                f"{missing} effectual block(s) of the plan never MAC'd",
+                where,
+            ))
+    return f
+
+
+def _check_compacted(nnz, idx, kdim: int, where: tuple) -> list[Finding]:
+    f: list[Finding] = []
+    rb, kb = idx.shape
+    if kdim < 1:
+        f.append(Finding(
+            "grid.store-count",
+            "kdim < 1: the store step (k_i == kdim - 1) never fires", where,
+        ))
+        return f
+    if kdim > kb:
+        f.append(Finding(
+            "grid.a-oob",
+            f"kdim={kdim} exceeds the {kb} idx columns the index map "
+            f"dereferences",
+            where,
+        ))
+        return f
+    max_nnz = int(nnz.max(initial=0))
+    if kdim < max_nnz:
+        f.append(Finding(
+            "grid.work-missing",
+            f"kdim={kdim} < max(nnz)={max_nnz}: rows with nnz > kdim "
+            f"silently drop their last MACs",
+            where,
+        ))
+    # every grid step k_i in [0, kdim) dereferences idx[m, k_i] — the gated
+    # tail included (a skipped step still prefetches a resident block)
+    deref = idx[:, :kdim]
+    if deref.size and (deref.min() < 0 or deref.max() >= kb):
+        f.append(Finding(
+            "grid.b-oob",
+            f"idx dereferenced by the grid outside [0, {kb})", where,
+        ))
+        return f
+    # duplicate effectual indices double-accumulate the same block
+    bound = np.minimum(nnz.astype(np.int64), kdim)
+    valid = np.arange(kdim, dtype=np.int64)[None, :] < bound[:, None]
+    pair = valid[:, 1:] & valid[:, :-1]
+    if np.any(pair & (deref[:, 1:] == deref[:, :-1])):
+        f.append(Finding(
+            "grid.work-dup",
+            "duplicate adjacent effectual idx entries double-accumulate a "
+            "block",
+            where,
+        ))
+    return f
+
+
+def check_grid(nnz, idx, *, nb: int = 1, compact_grid="ragged",
+               workqueue=None, kdim: int | None = None,
+               where: tuple = ()) -> list[Finding]:
+    """Abstractly interpret one kernel launch's grid against its index maps.
+
+    ``workqueue``/``kdim`` default to what the executor would derive from
+    ``(nnz, idx)`` — pass them explicitly to audit a hand-built (or
+    deliberately corrupted) schedule.  ``nb`` is the output-column block
+    count; it scales the grid uniformly and never changes validity.
+    """
+    from repro.kernels.tensordash_spmm import _check_compact_grid
+
+    _check_compact_grid(compact_grid)
+    if nb < 1:
+        return [Finding("grid.queue-shape", f"nb={nb} < 1", where)]
+    nnz = _host(nnz, "nnz")
+    idx = _host(idx, "idx")
+    if compact_grid == "ragged":
+        if workqueue is None:
+            from repro.sparse_train.plan_edit import _workqueue_np
+
+            workqueue = _workqueue_np(nnz.astype(np.int64), idx)
+        return _check_ragged(nnz, idx, workqueue, where)
+    if kdim is None:
+        kdim = max(int(nnz.max(initial=0)), 1) if compact_grid else idx.shape[1]
+    return _check_compacted(nnz, idx, int(kdim), where)
+
+
+def check_plan_grid(plan, *, nb: int = 1, compact_grid="ragged") -> list[Finding]:
+    """:func:`check_grid` for a :class:`~repro.runtime.plan.SparsityPlan`,
+    auditing the exact queue the plan carries (not a re-derivation)."""
+    wq = plan.workqueue() if compact_grid == "ragged" else None
+    return check_grid(
+        plan.nnz, plan.idx, nb=nb, compact_grid=compact_grid, workqueue=wq,
+    )
+
+
+def check_sharded(shards, *, nb: int = 1) -> list[Finding]:
+    """Audit a :class:`~repro.runtime.plan.PlanShards`: each shard's ragged
+    queue individually, then cross-shard coverage — the union of per-shard
+    MACs must re-create the global plan's effectual set exactly once
+    (M/K partition it; N replicates it against disjoint output columns)."""
+    f: list[Finding] = []
+    g_nnz = _host(shards.plan.nnz, "nnz").astype(np.int64)
+    g_idx = _host(shards.plan.idx, "idx").astype(np.int64)
+    rb, kb = g_idx.shape
+    for s in range(shards.n_shards):
+        f.extend(check_grid(
+            shards.nnz[s], shards.idx[s], nb=nb, compact_grid="ragged",
+            workqueue=(shards.row_starts[s], shards.work_row[s],
+                       shards.work_kblk[s]),
+            where=("shard", s),
+        ))
+    if f:
+        return f
+
+    def shard_keys(s: int) -> np.ndarray:
+        nnz_s = np.asarray(shards.nnz[s], dtype=np.int64)
+        idx_s = np.asarray(shards.idx[s], dtype=np.int64)
+        rows_l, kb_l = idx_s.shape
+        valid = np.arange(kb_l, dtype=np.int64)[None, :] < nnz_s[:, None]
+        rows = np.broadcast_to(
+            np.arange(rows_l, dtype=np.int64)[:, None], idx_s.shape
+        )
+        lr, lk = rows[valid], idx_s[valid]
+        if shards.axis == "M":  # local row -> dealt global row
+            order = np.asarray(shards.order, dtype=np.int64)
+            rows_per = rb // shards.n_shards
+            return order[s * rows_per + lr] * kb + lk
+        if shards.axis == "K":  # local K block -> global column slice
+            return lr * kb + (s * kb_l + lk)
+        return lr * kb + lk  # N: replicated global schedule
+
+    cols = np.arange(kb, dtype=np.int64)[None, :]
+    valid = cols < g_nnz[:, None]
+    rows = np.broadcast_to(np.arange(rb, dtype=np.int64)[:, None], g_idx.shape)
+    want = np.sort(rows[valid] * kb + g_idx[valid])
+    if shards.axis == "N":
+        for s in range(shards.n_shards):
+            if not np.array_equal(np.sort(shard_keys(s)), want):
+                f.append(Finding(
+                    "grid.shard-coverage",
+                    "N-sharded schedule is not an exact replica of the "
+                    "global schedule",
+                    ("shard", s),
+                ))
+        return f
+    got = np.sort(np.concatenate(
+        [shard_keys(s) for s in range(shards.n_shards)]
+    )) if shards.n_shards else np.empty(0, np.int64)
+    if not np.array_equal(got, want):
+        f.append(Finding(
+            "grid.shard-coverage",
+            f"union of per-shard MACs != global effectual set for axis "
+            f"{shards.axis!r} (every effectual MAC must land exactly once)",
+        ))
+    return f

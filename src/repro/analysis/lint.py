@@ -1,0 +1,334 @@
+"""Repo-specific AST linter: ``python -m repro.analysis.lint src/``.
+
+Six rules, each born from a pitfall this codebase has actually hit:
+
+``host-sync``
+    ``float(...)``/``int(...)``/``.item()`` applied to a device value
+    (a ``jnp.*``/``jax.*`` expression or a local assigned from one) forces a
+    blocking device fetch — in a launch/report path it serializes the device
+    stream, inside ``jit`` it fails outright.  Fetch once with
+    ``jax.device_get`` and reduce in numpy.
+``np-on-device``
+    ``np.*`` applied directly to a device expression silently syncs (and
+    under a trace, breaks).  Keep device math in ``jnp``; cross the boundary
+    explicitly.
+``loop-fetch``
+    ``np.asarray``/``np.array`` inside a loop on data rooted at a
+    maybe-device parameter: one device round-trip *per iteration* (the
+    controller's per-path score fetch).  Hoist a single ``jax.device_get``
+    of the whole tree above the loop.
+``traced-stats``
+    In ``kernels/``/``runtime/`` modules, ``np.*`` on a maybe-device
+    parameter without a ``jax.core.Tracer`` guard in the function — the
+    ``planned_grid_steps`` bug class: under ``jit`` the reduction blocks (or
+    leaks a tracer into host state).  Guard and raise, like ``host_nnz``.
+``workqueue-dropped``
+    A direct call to ``tensordash_matmul_planned``/``_fused`` without a
+    ``workqueue=`` passthrough in a function that didn't plan inline:
+    the kernel re-derives the queue per call, throwing away the plan's
+    carried CSR metadata.
+``shard-map-axes``
+    In modules that use ``ShardingPolicy.spmm_axes()``, a ``shard_map``
+    call in a function that derives its pspecs from neither
+    ``spmm_axes()`` nor ``_spec_axis()`` — hand-written axis names drift
+    from the policy's axis roles.
+
+Waivers: put ``# lint: allow-<rule>`` (e.g. ``# lint: allow-host-sync``) on
+the flagged line or the line above.  The linter is heuristic by design —
+it tracks taint per function (params without host-typed annotations are
+maybe-device; ``jax.device_get`` sanitizes; ``jnp.*``/``jax.*`` call
+results taint) and prefers false negatives over noise.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import pathlib
+import re
+import sys
+
+__all__ = ["LintFinding", "RULES", "lint_source", "lint_file", "lint_paths", "main"]
+
+RULES = (
+    "host-sync",
+    "np-on-device",
+    "loop-fetch",
+    "traced-stats",
+    "workqueue-dropped",
+    "shard-map-axes",
+)
+
+#: annotations that mark a parameter as host-side data (never a tracer)
+_HOST_ANNOTATIONS = re.compile(
+    r"ndarray|PlanShards|PlanDelta|SparsityPlan|PlanCache|Runtime\b"
+    r"|\bint\b|\bfloat\b|\bstr\b|\bbool\b|\bbytes\b|Path\b"
+)
+_WAIVER = re.compile(r"#\s*lint:\s*allow-([a-z-]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.code}] {self.message}"
+
+
+def _dotted(node) -> str:
+    """``jnp.mean`` -> ``"jnp.mean"``; non-name roots -> ``""``."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _root_name(node) -> str | None:
+    """The base ``Name`` a value expression is rooted at, through
+    attribute/subscript/call chains (``w_scores[path]`` -> ``w_scores``,
+    ``plan.shard(k)`` -> ``plan``)."""
+    while True:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        else:
+            return None
+
+
+def _is_device_call(node) -> bool:
+    """A call whose callee is rooted at ``jnp``/``jax`` (except the
+    sanitizer ``jax.device_get``)."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = _dotted(node.func)
+    if name == "jax.device_get":
+        return False
+    return name.startswith(("jnp.", "jax.")) or name in ("jnp", "jax")
+
+
+class _FunctionLint:
+    """Per-function taint walk.  ``maybe_device``: parameter names with no
+    host-typed annotation; ``tainted``: locals assigned from ``jnp``/``jax``
+    calls; ``host``: locals sanitized via ``jax.device_get`` (or rebound
+    from numpy/host expressions)."""
+
+    def __init__(self, fn: ast.AST, *, module_src: str, path: str,
+                 findings: list, waived):
+        self.fn = fn
+        self.path = path
+        self.findings = findings
+        self.waived = waived
+        self.module_src = module_src
+        self.maybe_device: set[str] = set()
+        self.host: set[str] = set()
+        self.tainted: set[str] = set()
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs
+                  + ([args.vararg] if args.vararg else [])
+                  + ([args.kwarg] if args.kwarg else [])):
+            if a.arg in ("self", "cls"):
+                continue
+            ann = ast.unparse(a.annotation) if a.annotation is not None else ""
+            if not ann or not _HOST_ANNOTATIONS.search(ann):
+                self.maybe_device.add(a.arg)
+        src = ast.unparse(fn)
+        self.has_tracer_guard = "Tracer" in src
+        self.plans_inline = bool(re.search(
+            r"\bplan_blocks\w*\(|\bplan_operand\(|\bplan_workqueue\(", src
+        ))
+        self.derives_specs = bool(re.search(
+            r"\.spmm_axes\(|\b_spec_axis\(", src
+        ))
+
+    # -- emit ---------------------------------------------------------------
+    def report(self, node, code: str, message: str) -> None:
+        line = node.lineno
+        if code in self.waived.get(line, ()) or code in self.waived.get(line - 1, ()):
+            return
+        self.findings.append(LintFinding(self.path, line, code, message))
+
+    # -- taint --------------------------------------------------------------
+    def _is_device_value(self, node) -> bool:
+        if _is_device_call(node):
+            return True
+        root = _root_name(node)
+        if root is None:
+            return False
+        if root in self.host:
+            return False
+        return root in self.tainted
+
+    def _note_assign(self, targets, value) -> None:
+        names = [t.id for t in targets if isinstance(t, ast.Name)]
+        if not names:
+            return
+        if isinstance(value, ast.Call) and _dotted(value.func) == "jax.device_get":
+            for n in names:
+                self.host.add(n)
+                self.tainted.discard(n)
+                self.maybe_device.discard(n)
+        elif _is_device_call(value):
+            for n in names:
+                self.tainted.add(n)
+                self.host.discard(n)
+        else:
+            # any other rebind clears prior taint (conservative: host)
+            for n in names:
+                self.tainted.discard(n)
+
+    # -- the walk -----------------------------------------------------------
+    def run(self, *, in_hot_module: bool, has_spmm_axes: bool) -> None:
+        loop_depth = 0
+
+        def visit(node):
+            nonlocal loop_depth
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node is not self.fn:
+                return  # nested functions get their own pass
+            if isinstance(node, ast.Assign):
+                self._note_assign(node.targets, node.value)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                self._note_assign([node.target], node.value)
+            if isinstance(node, ast.Call):
+                self._call(node, loop_depth, in_hot_module, has_spmm_axes)
+            if isinstance(node, (ast.For, ast.While)):
+                loop_depth += 1
+                for child in ast.iter_child_nodes(node):
+                    visit(child)
+                loop_depth -= 1
+                return
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        for child in ast.iter_child_nodes(self.fn):
+            visit(child)
+
+    def _call(self, node: ast.Call, loop_depth: int, in_hot_module: bool,
+              has_spmm_axes: bool) -> None:
+        callee = _dotted(node.func)
+
+        # host-sync: float()/int() on a device value, .item() on one
+        if callee in ("float", "int") and len(node.args) == 1:
+            if self._is_device_value(node.args[0]):
+                self.report(
+                    node, "host-sync",
+                    f"{callee}() on a device value forces a blocking fetch "
+                    f"— jax.device_get once, reduce in numpy",
+                )
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+                and not node.args and self._is_device_value(node.func.value)):
+            self.report(
+                node, "host-sync",
+                ".item() on a device value forces a blocking fetch",
+            )
+
+        # np-on-device / loop-fetch / traced-stats: np.* crossing the boundary
+        if callee.startswith("np.") and node.args:
+            arg = node.args[0]
+            if self._is_device_value(arg):
+                self.report(
+                    node, "np-on-device",
+                    f"{callee}() on a device value silently syncs (and "
+                    f"breaks under a trace) — keep device math in jnp",
+                )
+            else:
+                root = _root_name(arg)
+                if root in self.maybe_device and root not in self.host:
+                    if loop_depth and callee in ("np.asarray", "np.array"):
+                        self.report(
+                            node, "loop-fetch",
+                            f"{callee}({root}...) inside a loop: one device "
+                            f"round-trip per iteration — hoist a single "
+                            f"jax.device_get above the loop",
+                        )
+                    elif in_hot_module and not self.has_tracer_guard:
+                        self.report(
+                            node, "traced-stats",
+                            f"{callee}({root}...) without a jax.core.Tracer "
+                            f"guard: under jit this blocks or leaks a tracer "
+                            f"into host state (the planned_grid_steps bug "
+                            f"class)",
+                        )
+
+        # workqueue-dropped: planned-kernel call discarding the carried queue
+        if callee in ("tensordash_matmul_planned", "tensordash_matmul_fused"):
+            kws = {k.arg for k in node.keywords}
+            if "workqueue" not in kws and not self.plans_inline:
+                self.report(
+                    node, "workqueue-dropped",
+                    f"{callee}() without workqueue=: the plan's carried CSR "
+                    f"queue is re-derived per call",
+                )
+
+        # shard-map-axes: pspecs not derived from the policy's axis roles
+        if (callee.endswith("shard_map") and has_spmm_axes
+                and not self.derives_specs):
+            self.report(
+                node, "shard-map-axes",
+                "shard_map in a function that derives pspecs from neither "
+                "ShardingPolicy.spmm_axes() nor _spec_axis() — axis names "
+                "will drift from the policy",
+            )
+
+
+def lint_source(src: str, path: str = "<string>") -> list[LintFinding]:
+    """Lint one module's source text."""
+    tree = ast.parse(src, filename=path)
+    waived: dict[int, set] = {}
+    for i, line in enumerate(src.splitlines(), start=1):
+        m = _WAIVER.search(line)
+        if m:
+            waived.setdefault(i, set()).add(m.group(1))
+    in_hot_module = "/kernels/" in path or "/runtime/" in path
+    has_spmm_axes = "spmm_axes" in src and "shard_map" in src
+    findings: list[LintFinding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _FunctionLint(
+                node, module_src=src, path=path, findings=findings,
+                waived=waived,
+            ).run(in_hot_module=in_hot_module, has_spmm_axes=has_spmm_axes)
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings
+
+
+def lint_file(path) -> list[LintFinding]:
+    p = pathlib.Path(path)
+    return lint_source(p.read_text(), str(p).replace("\\", "/"))
+
+
+def lint_paths(paths) -> list[LintFinding]:
+    findings: list[LintFinding] = []
+    for path in paths:
+        p = pathlib.Path(path)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for fp in files:
+            findings.extend(lint_file(fp))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-specific JAX-pitfall linter (see module docstring)",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    args = ap.parse_args(argv)
+    findings = lint_paths(args.paths)
+    for f in findings:
+        print(f)
+    print(f"{len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

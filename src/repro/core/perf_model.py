@@ -158,7 +158,9 @@ def simulate_conv(
     td = jax.vmap(lambda z: simulate_tile(z, n_lanes=tile.n_lanes, lookahead=tile.lookahead).cycles)(
         jnp.asarray(masks)
     )
-    td_mean = float(jnp.mean(td))
+    # explicit single fetch, then reduce host-side: float(jnp.mean(...))
+    # would hide a blocking device sync inside the report path
+    td_mean = float(np.mean(jax.device_get(td)))
     scale = (t_full / t) * groups
     return ConvResult(td_cycles=td_mean * scale, dense_cycles=float(t_full) * groups)
 

@@ -206,6 +206,13 @@ def plan_workqueue(nnz: jax.Array, idx: jax.Array):
     operand values, one fused dispatch — so deriving the queue from an
     emitted mask or a transposed plan stays allocation-pattern-identical to
     v2 planning.
+
+    The queue invariants this construction guarantees (every effectual MAC
+    lands exactly once; see the list in
+    :mod:`repro.analysis.plan_check`) are statically checkable:
+    ``repro.analysis.verify_plan`` proves them for a concrete plan and
+    ``repro.analysis.check_grid`` re-enacts this grid's predicates on a
+    hand-built (or corrupted) queue.
     """
     mb, kb = idx.shape
     flat = mb * kb
@@ -518,7 +525,12 @@ def _ragged_grid_and_maps(nnz, idx, nb: int, workqueue):
     each step at ``(work_row[t], work_kblk[t])``.  The queue is derived from
     ``(nnz, idx)`` in-graph when the caller has none cached (a pure metadata
     transform XLA hoists out of loops), or reused verbatim from the
-    :class:`~repro.runtime.plan.SparsityPlan` that carries it."""
+    :class:`~repro.runtime.plan.SparsityPlan` that carries it.
+
+    The index arithmetic here is mirrored host-side by
+    :func:`repro.analysis.grid_check.check_grid` (``compact_grid="ragged"``),
+    which proves in-bounds access, store-exactly-once, and
+    zero-before-accumulate for a concrete queue — keep the two in sync."""
     if workqueue is None:
         workqueue = plan_workqueue(nnz, idx)
     row_starts, work_row, work_kblk = workqueue

@@ -406,14 +406,32 @@ sharded_fused_matmul.defvjp(_sfused_fwd, _sfused_bwd)
 # ---------------------------------------------------------------------------
 
 
+def _validate_launch(plan: SparsityPlan, validate: str | None) -> None:
+    """Gated static verification of a concrete plan at the distributed
+    launch boundary (``Runtime(validate=...)``, ambient when unthreaded)."""
+    if validate is None:
+        from repro import runtime as rtm  # local: import cycle
+
+        validate = rtm.resolve().validate
+    if validate != "off":
+        from repro.analysis.plan_check import check_plan  # local: keep import light
+
+        check_plan(plan, level=validate)
+
+
 def sharded_matmul(plan: SparsityPlan, a, b, *, bn: int, backend: str,
                    policy: ShardingPolicy, axis: str = "M",
                    balance: bool = True, out_dtype=None, plan_cache=None,
-                   plan_key=None, grad_backend=None, compact_grid="ragged"):
+                   plan_key=None, grad_backend=None, compact_grid="ragged",
+                   validate: str | None = None):
     """Sharded planned ``a @ b`` with the distributed sparsity-aware VJP —
     the ``shard_map`` twin of ``KernelBackend.matmul_planned`` (same
-    concrete fast path skipping the custom_vjp machinery)."""
+    concrete fast path skipping the custom_vjp machinery).  ``validate``
+    (default: the ambient runtime's level) statically verifies a concrete
+    plan before the distributed dispatch — the launch boundary where a
+    corrupt queue would otherwise surface as a wrong answer on one shard."""
     if _all_concrete(plan.nnz, plan.idx, a, b):
+        _validate_launch(plan, validate)
         req = KernelRequest(
             nnz=plan.nnz, idx=plan.idx, a=a, b=b,
             bm=plan.bm, bk=plan.bk, bn=bn,
@@ -436,10 +454,13 @@ def sharded_matmul_fused(plan: SparsityPlan, a, b, *, bias=None,
                          backend: str, policy: ShardingPolicy,
                          axis: str = "M", balance: bool = True,
                          out_dtype=None, plan_cache=None, plan_key=None,
-                         grad_backend=None, compact_grid="ragged"):
+                         grad_backend=None, compact_grid="ragged",
+                         validate: str | None = None):
     """Sharded fused matmul with the distributed VJP — the ``shard_map``
-    twin of ``KernelBackend.matmul_fused``; returns ``(out, mask)``."""
+    twin of ``KernelBackend.matmul_fused``; returns ``(out, mask)``.
+    ``validate`` as in :func:`sharded_matmul`."""
     if _all_concrete(plan.nnz, plan.idx, a, b, bias, residual):
+        _validate_launch(plan, validate)
         req = KernelRequest(
             nnz=plan.nnz, idx=plan.idx, a=a, b=b,
             bias=bias, residual=residual, activation=activation,

@@ -445,11 +445,18 @@ class PlanCache:
     sustained serving with more live weights than ``capacity`` evicts the
     coldest plan, never a just-hit hot one (the FIFO predecessor thrashed
     exactly those).
+
+    ``validate`` (normally propagated from ``Runtime(validate=...)``) gates
+    the static verifier at every insertion: ``"boundary"`` runs the O(Rb)
+    structural checks, ``"full"`` the O(entries) content checks
+    (:func:`repro.analysis.plan_check.verify_plan`).  Hits are never
+    re-verified — an entry that passed at ``store`` time is immutable.
     """
 
-    def __init__(self, capacity: int | None = None):
+    def __init__(self, capacity: int | None = None, validate: str = "off"):
         self._entries: dict[tuple, tuple[Any, SparsityPlan]] = {}
         self.capacity = capacity
+        self.validate = validate
         self.hits = 0
         self.misses = 0
         #: plans built for traced operands (inside jit/grad/scan): part of the
@@ -476,6 +483,10 @@ class PlanCache:
 
     def store(self, key, a, plan: SparsityPlan) -> SparsityPlan:
         self.misses += 1
+        if self.validate != "off" and not isinstance(plan.nnz, jax.core.Tracer):
+            from repro.analysis.plan_check import check_plan  # local: keep import light
+
+            check_plan(plan, level=self.validate)
         k = self._key(key, a, plan.bm, plan.bk, plan.side)
         # rebinding an existing key replaces (and refreshes recency) — never
         # evicts a live unrelated entry

@@ -31,7 +31,6 @@ import contextlib
 import contextvars
 import dataclasses
 import functools
-import warnings
 from typing import Any
 
 import jax
@@ -87,10 +86,17 @@ class Runtime:
 
     ``sharding`` is the declarative
     :class:`~repro.parallel.sharding.ShardingPolicy` — mesh, axis roles and
-    parameter spec tables in one value; ``None`` means single-device.  The
-    old untyped ``mesh=`` field is a one-release deprecation shim: passing
-    it warns and wraps the mesh in a default policy, and :attr:`mesh` reads
-    back ``sharding.mesh``.
+    parameter spec tables in one value; ``None`` means single-device.
+    :attr:`mesh` reads back ``sharding.mesh`` (the old untyped ``mesh=``
+    constructor shim completed its one-release deprecation cycle and is
+    gone).
+
+    ``validate`` gates the static plan verifier
+    (:mod:`repro.analysis.plan_check`): ``"off"`` (default) trusts the
+    planners; ``"boundary"`` runs the O(Rb) structural checks at every
+    ``PlanCache`` insertion and ``edit_plan``; ``"full"`` adds the
+    O(entries) content checks.  Traced plans are always skipped (they are
+    part of the compiled program, not host metadata).
     """
 
     backend: str = "dense"
@@ -107,22 +113,32 @@ class Runtime:
     # fp32 (validated in matmul) — a bf16-accumulate Pallas variant per the
     # paper's §bfloat16 evaluation would register a backend honouring this
     accum_dtype: Any = jnp.float32
+    # static plan verification level ("off" | "boundary" | "full")
+    validate: str = "off"
 
     # -- construction ------------------------------------------------------
     def __post_init__(self):
+        from repro.analysis.plan_check import LEVELS
         from repro.kernels.tensordash_spmm import _check_compact_grid
 
         # fail at construction, not at the first kernel call deep in a
         # model: a typo'd mode string would otherwise silently select v2
         _check_compact_grid(self.compact_grid)
+        if self.validate not in LEVELS:
+            raise ValueError(
+                f"validate={self.validate!r} not one of {LEVELS}"
+            )
+        # the cache is carried by handle; keep its gate in step with the
+        # policy that owns it (replace() re-runs this on the same handle)
+        self.plan_cache.validate = self.validate
 
     def replace(self, **kw) -> "Runtime":
         return dataclasses.replace(self, **kw)
 
     @property
     def mesh(self):
-        """Deprecated read-alias for ``sharding.mesh`` (one-release shim —
-        construct with ``sharding=ShardingPolicy(mesh=...)``)."""
+        """Read-alias for ``sharding.mesh`` (construct with
+        ``sharding=ShardingPolicy(mesh=...)``)."""
         return self.sharding.mesh if self.sharding is not None else None
 
     @property
@@ -366,6 +382,7 @@ class Runtime:
             backend=self.backend, policy=policy, axis=axis, balance=balance,
             out_dtype=a.dtype, plan_cache=self.plan_cache,
             plan_key=("A", plan_key), compact_grid=self.compact_grid,
+            validate=self.validate,
         )
 
     def matmul_fused_sharded(self, a, b, *, bias=None, residual=None,
@@ -399,7 +416,7 @@ class Runtime:
             bn=_fit_block(rt.bn, b.shape[1]), backend=self.backend,
             policy=policy, axis=axis, balance=balance, out_dtype=a.dtype,
             plan_cache=self.plan_cache, plan_key=("A", plan_key),
-            compact_grid=self.compact_grid,
+            compact_grid=self.compact_grid, validate=self.validate,
         )
 
     def sparse_ffn(self, x, w1, w2, *, activation: str = "relu"):
@@ -485,37 +502,6 @@ class Runtime:
             return jax.lax.dynamic_update_slice(full, p.astype(full.dtype), tuple(start))
 
         return jax.tree.map(place, caches, part, axes)
-
-
-# --- one-release deprecation shim: Runtime(mesh=...) -----------------------
-# ``mesh`` is no longer a dataclass field (the property above reads
-# ``sharding.mesh``), so the generated __init__ is wrapped to accept the old
-# keyword, warn, and fold the mesh into a default ShardingPolicy.
-# ``dataclasses.replace`` re-invokes __init__ with field names only, so
-# replace() never re-warns.
-
-_MESH_UNSET = object()
-_dataclass_init = Runtime.__init__
-
-
-@functools.wraps(_dataclass_init)
-def _init_with_mesh_shim(self, *args, mesh=_MESH_UNSET, **kw):
-    if mesh is not _MESH_UNSET and mesh is not None:
-        warnings.warn(
-            "Runtime(mesh=...) is deprecated; pass "
-            "sharding=ShardingPolicy(mesh=...) "
-            "(from repro.parallel.sharding) instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        if kw.get("sharding") is None:
-            from repro.parallel.sharding import ShardingPolicy  # local: import cycle
-
-            kw["sharding"] = ShardingPolicy(mesh=mesh)
-    _dataclass_init(self, *args, **kw)
-
-
-Runtime.__init__ = _init_with_mesh_shim
 
 
 @functools.lru_cache(maxsize=None)

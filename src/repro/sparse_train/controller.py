@@ -27,6 +27,7 @@ import dataclasses
 import math
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -202,6 +203,11 @@ class DynamicSparsityController:
         frac = self.cfg.update_fraction(step)
         pruned = regrown = 0
         t0 = time.perf_counter()
+        # one transfer for both metric trees — a per-path np.asarray inside
+        # the loop would round-trip the device once per weight
+        w_scores = jax.device_get(w_scores)
+        if g_scores is not None:
+            g_scores = jax.device_get(g_scores)
         for path, u in self.units.items():
             ws = np.asarray(w_scores[path], np.float32).reshape(u.layers, u.kb, u.nb)
             gs = (
@@ -217,9 +223,12 @@ class DynamicSparsityController:
                 regrown += len(delta.regrow)
                 # weight-oriented delta edits the backward plan directly and
                 # the forward (transposed-operand) plan swapped — one
-                # selection, both schedules spliced
-                u.bwd[l] = edit_plan(u.bwd[l], delta)
-                u.fwd[l] = edit_plan(u.fwd[l], delta.swapped())
+                # selection, both schedules spliced (and, under the
+                # runtime's validate policy, structurally verified)
+                u.bwd[l] = edit_plan(u.bwd[l], delta, validate=self.rt.validate)
+                u.fwd[l] = edit_plan(
+                    u.fwd[l], delta.swapped(), validate=self.rt.validate
+                )
                 m = u.mask[l]
                 if len(delta.prune):
                     m[delta.prune[:, 0], delta.prune[:, 1]] = False

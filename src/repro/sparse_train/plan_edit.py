@@ -269,7 +269,8 @@ def _splice_workqueue(plan: SparsityPlan, new_nnz, new_idx, affected):
     return row_starts, work_row, work_kblk
 
 
-def edit_plan(plan: SparsityPlan, delta: PlanDelta) -> SparsityPlan:
+def edit_plan(plan: SparsityPlan, delta: PlanDelta, *,
+              validate: str | None = None) -> SparsityPlan:
     """Apply a prune/regrow delta to a live plan — the incremental
     replacement for a full replan.
 
@@ -279,7 +280,21 @@ def edit_plan(plan: SparsityPlan, delta: PlanDelta) -> SparsityPlan:
     the flat work queue is spliced around them.  Returns a new plan with
     numpy metadata, bit-identical to ``plan_blocks_csr`` of an operand with
     the edited block mask; the input plan is not mutated.
+
+    Two validation layers, different failure classes: the delta-vs-plan
+    *semantic* checks above (prune-inactive / regrow-active / overlap)
+    always run — they catch controller/plan drift that no amount of plan
+    self-consistency can see.  ``validate`` (default: the ambient
+    :class:`~repro.runtime.runtime.Runtime`'s level) additionally runs the
+    shared *structural* verifier
+    (:func:`repro.analysis.plan_check.verify_plan`) on the edited result,
+    proving the spliced queue is still exactly the CSR schedule of the
+    edited ``(nnz, idx)``.
     """
+    if validate is None:
+        from repro import runtime as rtm  # local: import cycle
+
+        validate = rtm.resolve().validate
     if delta.size == 0:
         return plan
     nnz = np.asarray(plan.nnz)
@@ -297,7 +312,7 @@ def edit_plan(plan: SparsityPlan, delta: PlanDelta) -> SparsityPlan:
         # dense delta: almost every gap segment between affected rows is
         # empty, so splicing degenerates — merge the delta into the sorted
         # effectual-entry stream instead (identical output either way)
-        return _edit_entries(plan, delta)
+        return _validated(_edit_entries(plan, delta), validate)
 
     # reconstruct the affected rows' mask, validate + apply the delta there
     sub = np.zeros((affected.size, kb), bool)
@@ -322,8 +337,16 @@ def edit_plan(plan: SparsityPlan, delta: PlanDelta) -> SparsityPlan:
     row_starts, work_row, work_kblk = _splice_workqueue(
         plan, new_nnz, new_idx, affected
     )
-    return SparsityPlan(
+    return _validated(SparsityPlan(
         nnz=new_nnz, idx=new_idx, bm=plan.bm, bk=plan.bk, shape=plan.shape,
         dtype=plan.dtype, side=plan.side, row_starts=row_starts,
         work_row=work_row, work_kblk=work_kblk,
-    )
+    ), validate)
+
+
+def _validated(plan: SparsityPlan, level: str) -> SparsityPlan:
+    if level != "off":
+        from repro.analysis.plan_check import check_plan  # local: keep import light
+
+        check_plan(plan, level=level)
+    return plan

@@ -324,24 +324,22 @@ def test_ambient_policy_resolution():
         assert rtm.active_policy(other) is other
 
 
-def test_mesh_kwarg_deprecation_shim():
-    """``Runtime(mesh=...)`` warns exactly once per construction and lands
-    the mesh in an auto-built ShardingPolicy; ``replace`` never re-warns."""
+def test_mesh_kwarg_shim_is_gone():
+    """PR 7 scheduled the one-release ``Runtime(mesh=...)`` constructor shim
+    for removal here: the keyword must no longer exist, while the readable
+    ``rt.mesh`` property (the ``sharding.mesh`` alias) keeps working."""
+    from repro.parallel.sharding import ShardingPolicy
+
     sentinel = object()
-    with pytest.warns(DeprecationWarning, match="Runtime.mesh=.* is deprecated"):
-        rt = Runtime(mesh=sentinel)
+    with pytest.raises(TypeError):
+        Runtime(mesh=sentinel)
+    # the replacement path is the only path, and reads back via .mesh
+    rt = Runtime(sharding=ShardingPolicy(mesh=sentinel))
     assert rt.mesh is sentinel
-    assert rt.sharding is not None and rt.sharding.mesh is sentinel
     with rtm.use(rt):
         assert rtm.active_mesh(None) is sentinel
-    # dataclasses.replace goes through the real fields only: no warning
-    import warnings as _warnings
-
-    with _warnings.catch_warnings():
-        _warnings.simplefilter("error")
-        rt2 = rt.replace(bn=32)
-        Runtime(mesh=None)  # explicit None is a no-op, not a deprecation
-    assert rt2.mesh is sentinel
+    assert Runtime().mesh is None
+    assert rt.replace(bn=32).mesh is sentinel
 
 
 # ---------------------------------------------------------------------------
