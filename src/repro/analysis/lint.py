@@ -1,6 +1,6 @@
 """Repo-specific AST linter: ``python -m repro.analysis.lint src/``.
 
-Six rules, each born from a pitfall this codebase has actually hit:
+Seven rules, each born from a pitfall this codebase has actually hit:
 
 ``host-sync``
     ``float(...)``/``int(...)``/``.item()`` applied to a device value
@@ -32,6 +32,12 @@ Six rules, each born from a pitfall this codebase has actually hit:
     call in a function that derives its pspecs from neither
     ``spmm_axes()`` nor ``_spec_axis()`` — hand-written axis names drift
     from the policy's axis roles.
+``hand-geometry``
+    A literal ``bm=``/``bk=``/``bn=``/``compact_grid=`` keyword outside
+    ``repro/tune/`` and ``repro/runtime/`` — hand-pinned kernel policy at
+    a call site.  Geometry belongs to the ``Runtime`` (and, under
+    ``geometry="auto"``, to the measured ``TuningDB``); a hand literal
+    silently overrides both and never benefits from tuning.
 
 Waivers: put ``# lint: allow-<rule>`` (e.g. ``# lint: allow-host-sync``) on
 the flagged line or the line above.  The linter is heuristic by design —
@@ -57,7 +63,11 @@ RULES = (
     "traced-stats",
     "workqueue-dropped",
     "shard-map-axes",
+    "hand-geometry",
 )
+
+#: kernel-policy keywords owned by Runtime/TuningDB resolution
+_GEOMETRY_KWARGS = ("bm", "bk", "bn", "compact_grid")
 
 #: annotations that mark a parameter as host-side data (never a tracer)
 _HOST_ANNOTATIONS = re.compile(
@@ -187,7 +197,8 @@ class _FunctionLint:
                 self.tainted.discard(n)
 
     # -- the walk -----------------------------------------------------------
-    def run(self, *, in_hot_module: bool, has_spmm_axes: bool) -> None:
+    def run(self, *, in_hot_module: bool, has_spmm_axes: bool,
+            in_policy_module: bool) -> None:
         loop_depth = 0
 
         def visit(node):
@@ -199,7 +210,8 @@ class _FunctionLint:
             elif isinstance(node, ast.AnnAssign) and node.value is not None:
                 self._note_assign([node.target], node.value)
             if isinstance(node, ast.Call):
-                self._call(node, loop_depth, in_hot_module, has_spmm_axes)
+                self._call(node, loop_depth, in_hot_module, has_spmm_axes,
+                           in_policy_module)
             if isinstance(node, (ast.For, ast.While)):
                 loop_depth += 1
                 for child in ast.iter_child_nodes(node):
@@ -213,7 +225,7 @@ class _FunctionLint:
             visit(child)
 
     def _call(self, node: ast.Call, loop_depth: int, in_hot_module: bool,
-              has_spmm_axes: bool) -> None:
+              has_spmm_axes: bool, in_policy_module: bool) -> None:
         callee = _dotted(node.func)
 
         # host-sync: float()/int() on a device value, .item() on one
@@ -269,6 +281,20 @@ class _FunctionLint:
                     f"queue is re-derived per call",
                 )
 
+        # hand-geometry: literal kernel-policy kwargs outside the modules
+        # that own geometry resolution (repro/tune/, repro/runtime/)
+        if not in_policy_module:
+            for kw in node.keywords:
+                if (kw.arg in _GEOMETRY_KWARGS
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is not None):
+                    self.report(
+                        kw.value, "hand-geometry",
+                        f"literal {kw.arg}={kw.value.value!r} hand-pins kernel "
+                        f"policy at the call site — let the Runtime (or the "
+                        f"TuningDB under geometry='auto') resolve it",
+                    )
+
         # shard-map-axes: pspecs not derived from the policy's axis roles
         if (callee.endswith("shard_map") and has_spmm_axes
                 and not self.derives_specs):
@@ -289,6 +315,7 @@ def lint_source(src: str, path: str = "<string>") -> list[LintFinding]:
         if m:
             waived.setdefault(i, set()).add(m.group(1))
     in_hot_module = "/kernels/" in path or "/runtime/" in path
+    in_policy_module = "/tune/" in path or "/runtime/" in path
     has_spmm_axes = "spmm_axes" in src and "shard_map" in src
     findings: list[LintFinding] = []
     for node in ast.walk(tree):
@@ -296,7 +323,8 @@ def lint_source(src: str, path: str = "<string>") -> list[LintFinding]:
             _FunctionLint(
                 node, module_src=src, path=path, findings=findings,
                 waived=waived,
-            ).run(in_hot_module=in_hot_module, has_spmm_axes=has_spmm_axes)
+            ).run(in_hot_module=in_hot_module, has_spmm_axes=has_spmm_axes,
+                  in_policy_module=in_policy_module)
     findings.sort(key=lambda f: (f.path, f.line, f.code))
     return findings
 

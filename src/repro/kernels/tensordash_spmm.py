@@ -77,6 +77,7 @@ inside the ~16 MB VMEM of a TPU core; all dims are multiples of the MXU's
 from __future__ import annotations
 
 import functools
+from typing import Literal
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +87,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "COMPACT_GRID_MODES",
+    "CompactGrid",
     "plan_blocks",
     "plan_blocks_csr",
     "plan_to_mask",
@@ -108,20 +110,34 @@ FUSED_ACTIVATIONS = ("none", "relu", "squared_relu")
 
 #: valid ``compact_grid`` modes: v3 ragged work queue / v2 max(nnz) bound /
 #: v1 full gated grid
-COMPACT_GRID_MODES = ("ragged", True, False)
+COMPACT_GRID_MODES = ("ragged", "v2", "v1")
+
+#: the normalized grid-family type every layer carries after
+#: :func:`_check_compact_grid` (legacy ``True``/``False`` normalize to
+#: ``"v2"``/``"v1"`` at entry, so jit static-arg caches see one canonical
+#: value per mode)
+CompactGrid = Literal["ragged", "v2", "v1"]
 
 
-def _check_compact_grid(value):
-    """Reject unrecognized grid modes loudly: any stray truthy value (a
-    typo'd string, a future mode name) would otherwise silently select the
-    v2 branch — numerically correct, so the user would never notice they
-    lost the skew-immune v3 behavior they asked for."""
-    if not any(value is m or value == m for m in COMPACT_GRID_MODES):
-        raise ValueError(
-            f"compact_grid={value!r} not one of {COMPACT_GRID_MODES} "
-            '("ragged" = v3 work queue, True = v2 max(nnz) grid, '
-            "False = v1 full gated grid)"
-        )
+def _check_compact_grid(value) -> CompactGrid:
+    """Normalize a grid-mode value to its canonical literal, rejecting
+    anything unrecognized loudly: a stray truthy value (a typo'd string, a
+    future mode name) dispatched by truthiness would silently select the v2
+    branch — numerically correct, so the user would never notice they lost
+    the skew-immune v3 behavior they asked for.  Legacy boolean spellings
+    (``True`` = v2, ``False`` = v1) are accepted and normalized, so every
+    downstream dispatch can compare against the literals alone."""
+    if isinstance(value, str) and value in COMPACT_GRID_MODES:
+        return value
+    if value is True:
+        return "v2"
+    if value is False:
+        return "v1"
+    raise ValueError(
+        f"compact_grid={value!r} not one of {COMPACT_GRID_MODES} "
+        '("ragged" = v3 work queue, "v2"/True = max(nnz) grid, '
+        '"v1"/False = full gated grid)'
+    )
 
 
 def _compiler_params(**kw):
@@ -357,8 +373,8 @@ def transpose_plan_csr(nnz: jax.Array, idx: jax.Array):
 
 def planned_grid_steps(nnz, kb: int, mb: int, nb: int, *, compact_grid="ragged") -> int:
     """Grid steps the planned kernel will issue — the "time" the paper's
-    scheduler buys.  v1 (``compact_grid=False``) always issues the full
-    ``Mb * Nb * Kb``; v2 (``True``) issues ``Mb * Nb * max(nnz, 1)``; v3
+    scheduler buys.  v1 (``compact_grid="v1"``) always issues the full
+    ``Mb * Nb * Kb``; v2 (``"v2"``) issues ``Mb * Nb * max(nnz, 1)``; v3
     (``"ragged"``) issues ``Nb * sum(max(nnz, 1))`` — effectual blocks
     exactly (plus one gated zero-fill step per all-zero row), independent
     of skew.
@@ -370,7 +386,7 @@ def planned_grid_steps(nnz, kb: int, mb: int, nb: int, *, compact_grid="ragged")
     instead; call this outside the traced region, or use
     ``SparsityPlan.grid_steps`` which serves cached host-side stats.
     """
-    _check_compact_grid(compact_grid)
+    compact_grid = _check_compact_grid(compact_grid)
     if isinstance(nnz, jax.core.Tracer):
         raise TypeError(
             "planned_grid_steps needs a concrete plan: nnz is a tracer "
@@ -382,7 +398,7 @@ def planned_grid_steps(nnz, kb: int, mb: int, nb: int, *, compact_grid="ragged")
     nnz_h = np.asarray(nnz)
     if compact_grid == "ragged":
         return nb * int(np.maximum(nnz_h, 1).sum())
-    kdim = kb if not compact_grid else max(int(nnz_h.max(initial=0)), 1)
+    kdim = kb if compact_grid == "v1" else max(int(nnz_h.max(initial=0)), 1)
     return mb * nb * kdim
 
 
@@ -551,11 +567,12 @@ def _ragged_grid_and_maps(nnz, idx, nb: int, workqueue):
     return (row_starts, work_row, work_kblk), grid, a_map, b_map, o_map
 
 
-def _grid_and_maps(nnz, mb: int, nb: int, kb: int, compact_grid: bool):
+def _grid_and_maps(nnz, mb: int, nb: int, kb: int, compact_grid: CompactGrid):
     """Common v1/v2 grid geometry: the K dimension is the dynamic compacted
     bound ``max(nnz)`` (>= 1 so the zero accumulator still stores) or the
-    static Kb."""
-    kdim = jnp.maximum(jnp.max(nnz), 1) if compact_grid else kb
+    static Kb.  ``compact_grid`` is the normalized literal (``"v2"``/``"v1"``
+    — never a bool, and never dispatched by truthiness: ``"v1"`` is truthy)."""
+    kdim = jnp.maximum(jnp.max(nnz), 1) if compact_grid == "v2" else kb
     grid = (mb, nb, kdim)
 
     def a_map(m_i, n_i, k_i, nnz_ref, idx_ref):
@@ -604,9 +621,12 @@ def tensordash_matmul_planned(
       ``workqueue`` optionally supplies the precomputed
       ``(row_starts, work_row, work_kblk)`` triple (e.g. from a
       ``SparsityPlan`` that carries it); otherwise it is derived in-graph.
-    * ``True`` (v2): ``(Mb, Nb, max(nnz))`` grid — one dense row drags every
+    * ``"v2"``: ``(Mb, Nb, max(nnz))`` grid — one dense row drags every
       row to dense cost.
-    * ``False`` (v1): full ``(Mb, Nb, Kb)`` gated grid, for A/B baselines.
+    * ``"v1"``: full ``(Mb, Nb, Kb)`` gated grid, for A/B baselines.
+
+    Legacy boolean spellings (``True`` = v2, ``False`` = v1) normalize at
+    entry (:func:`_check_compact_grid`).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -615,7 +635,7 @@ def tensordash_matmul_planned(
     mb, kb, nb = m // bm, k // bk, n // bn
     out_dtype = out_dtype or a.dtype
 
-    _check_compact_grid(compact_grid)
+    compact_grid = _check_compact_grid(compact_grid)
     if compact_grid == "ragged":
         wq, grid, a_map, b_map, o_map = _ragged_grid_and_maps(nnz, idx, nb, workqueue)
         operands = (nnz,) + wq + (a, b)
@@ -688,7 +708,7 @@ def tensordash_matmul_fused(
     mb, kb, nb = m // bm, k // bk, n // bn
     out_dtype = out_dtype or a.dtype
 
-    _check_compact_grid(compact_grid)
+    compact_grid = _check_compact_grid(compact_grid)
     if compact_grid == "ragged":
         wq, grid, a_map, b_map, o_map = _ragged_grid_and_maps(nnz, idx, nb, workqueue)
         operands = list((nnz,) + wq + (a, b))

@@ -54,6 +54,9 @@ def main() -> None:
     ap.add_argument("--backend", default="dense", choices=rtm.available_backends())
     ap.add_argument("--block", type=int, nargs=3, metavar=("BM", "BK", "BN"),
                     default=None, help="block geometry override")
+    ap.add_argument("--geometry", default="explicit", choices=rtm.GEOMETRIES,
+                    help="'auto' resolves tile geometry / grid family per "
+                         "call site from the TuningDB (python -m repro.tune)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -64,7 +67,8 @@ def main() -> None:
         mesh = make_production_mesh()
     geom = dict(zip(("bm", "bk", "bn"), args.block)) if args.block else {}
     policy = ShardingPolicy(mesh=mesh)
-    rt = rtm.Runtime(backend=args.backend, sharding=policy, **geom)
+    rt = rtm.Runtime(backend=args.backend, sharding=policy,
+                     geometry=args.geometry, **geom)
     rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU)
 
     params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))

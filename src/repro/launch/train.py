@@ -84,6 +84,9 @@ def main() -> None:
     ap.add_argument("--bm", type=int, default=None, help="block rows (sparse kernels)")
     ap.add_argument("--bk", type=int, default=None, help="contraction block size")
     ap.add_argument("--bn", type=int, default=None, help="output block size")
+    ap.add_argument("--geometry", default="explicit", choices=rtm.GEOMETRIES,
+                    help="'auto' resolves tile geometry / grid family per "
+                         "call site from the TuningDB (python -m repro.tune)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -101,7 +104,8 @@ def main() -> None:
         # dynamic-sparsity mask to one block per weight — no granularity)
         geom = {"bm": 8, "bk": 16, "bn": 16}
     policy = ShardingPolicy(mesh=mesh)
-    rt = rtm.Runtime(backend=args.backend, sharding=policy, **geom)
+    rt = rtm.Runtime(backend=args.backend, sharding=policy,
+                     geometry=args.geometry, **geom)
     rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU) vs silent dense fallback
 
     specs = M.param_specs(cfg)

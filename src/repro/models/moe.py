@@ -133,6 +133,16 @@ def _expert_ffn(cfg: MoEConfig, xe, w_gate, w_up, w_down):
     g = jnp.einsum("ecd,edf->ecf", xe, w_gate)
     u = jnp.einsum("ecd,edf->ecf", xe, w_up)
     h = act(g) * u
+    rt = rtm.resolve(None)
+    if rt.wants_sparse and cfg.activation in ("relu", "squared_relu"):
+        # relu-family gates leave exact zeros in h, so each expert's
+        # down-projection is a planned block-sparse product.  Routed
+        # per-expert (not one fused einsum) so every expert resolves its
+        # own tuned cell — expert capacity C, not the merged E*C shape,
+        # is the bucket a ``geometry="auto"`` runtime tunes for.
+        ys = [rt.matmul(h[e], w_down[e], op="moe_expert")
+              for e in range(h.shape[0])]
+        return jnp.stack(ys)
     return jnp.einsum("ecf,efd->ecd", h, w_down)
 
 

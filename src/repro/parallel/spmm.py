@@ -279,10 +279,13 @@ class ShardedVJP(PlannedVJP):
     balance: bool = True
 
     def _sharded_execute(self, name, nnz, idx, a, b, *, bm, bk, bn,
-                         out_dtype, workqueue=None, axis="M"):
+                         out_dtype, workqueue=None, axis="M",
+                         compact_grid=None):
         req = KernelRequest(
             nnz=nnz, idx=idx, a=a, b=b, bm=bm, bk=bk, bn=bn,
-            out_dtype=out_dtype, compact_grid=self.compact_grid,
+            out_dtype=out_dtype,
+            compact_grid=(self.compact_grid if compact_grid is None
+                          else compact_grid),
             workqueue=workqueue,
         )
         return sharded_execute_planned(
@@ -296,16 +299,27 @@ def sharded_matmul_grads(ctx: ShardedVJP, nnz, idx, a, b, g):
     :func:`repro.runtime.autodiff.planned_matmul_grads`."""
     g32 = g.astype(jnp.float32)
     pg = _cot_plan(ctx, g32)
+    # per-shard queues AND per-product tuned policy: each backward product
+    # resolves its own lane width / grid family key (the transposed plan
+    # generally wants a different geometry than the forward)
+    bn_da, cg_da = ctx._bwd_policy(
+        "matmul_da", g.shape[0], g.shape[1], b.shape[0], a.dtype, bn=ctx.bk
+    )
     da = ctx._sharded_execute(
         ctx.bwd_backend, pg.nnz, pg.idx, g32, b.astype(jnp.float32).T,
-        bm=ctx.bm, bk=ctx.bn, bn=ctx.bk, out_dtype=a.dtype,
-        workqueue=ctx._plan_workqueue(pg), axis="M",
+        bm=ctx.bm, bk=ctx.bn, bn=bn_da, out_dtype=a.dtype,
+        workqueue=ctx._plan_workqueue(pg, cg_da), axis="M",
+        compact_grid=cg_da,
     )
     pt = _lhs_t_plan(ctx, nnz, idx, a)
+    bn_db, cg_db = ctx._bwd_policy(
+        "matmul_db", a.shape[1], a.shape[0], g.shape[1], b.dtype, bn=ctx.bn
+    )
     db = ctx._sharded_execute(
         ctx.bwd_backend, pt.nnz, pt.idx, a.astype(jnp.float32).T, g32,
-        bm=ctx.bk, bk=ctx.bm, bn=ctx.bn, out_dtype=b.dtype,
-        workqueue=ctx._plan_workqueue(pt), axis="N",
+        bm=ctx.bk, bk=ctx.bm, bn=bn_db, out_dtype=b.dtype,
+        workqueue=ctx._plan_workqueue(pt, cg_db), axis="N",
+        compact_grid=cg_db,
     )
     return da, db
 
@@ -381,16 +395,24 @@ def _sfused_bwd(ctx: ShardedFusedVJP, res, cots):
             ctx.cache.traced += int(isinstance(mask, jax.core.Tracer))
     else:
         pg = _cot_plan(ctx, g_pre)
+    bn_da, cg_da = ctx._bwd_policy(
+        "matmul_da", g.shape[0], g.shape[1], b.shape[0], a.dtype, bn=ctx.bk
+    )
     da = ctx._sharded_execute(
         ctx.bwd_backend, pg.nnz, pg.idx, g_pre, b.astype(jnp.float32).T,
-        bm=ctx.bm, bk=ctx.bn, bn=ctx.bk, out_dtype=a.dtype,
-        workqueue=ctx._plan_workqueue(pg), axis="M",
+        bm=ctx.bm, bk=ctx.bn, bn=bn_da, out_dtype=a.dtype,
+        workqueue=ctx._plan_workqueue(pg, cg_da), axis="M",
+        compact_grid=cg_da,
     )
     pt = _lhs_t_plan(ctx, nnz, idx, a)
+    bn_db, cg_db = ctx._bwd_policy(
+        "matmul_db", a.shape[1], a.shape[0], g.shape[1], b.dtype, bn=ctx.bn
+    )
     db = ctx._sharded_execute(
         ctx.bwd_backend, pt.nnz, pt.idx, a.astype(jnp.float32).T, g_pre,
-        bm=ctx.bk, bk=ctx.bm, bn=ctx.bn, out_dtype=b.dtype,
-        workqueue=ctx._plan_workqueue(pt), axis="N",
+        bm=ctx.bk, bk=ctx.bm, bn=bn_db, out_dtype=b.dtype,
+        workqueue=ctx._plan_workqueue(pt, cg_db), axis="N",
+        compact_grid=cg_db,
     )
     zero = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int plan metadata
     dbias = None if bias is None else jnp.sum(g_pre, axis=0).astype(bias.dtype)
@@ -423,7 +445,7 @@ def sharded_matmul(plan: SparsityPlan, a, b, *, bn: int, backend: str,
                    policy: ShardingPolicy, axis: str = "M",
                    balance: bool = True, out_dtype=None, plan_cache=None,
                    plan_key=None, grad_backend=None, compact_grid="ragged",
-                   validate: str | None = None):
+                   validate: str | None = None, db=None):
     """Sharded planned ``a @ b`` with the distributed sparsity-aware VJP —
     the ``shard_map`` twin of ``KernelBackend.matmul_planned`` (same
     concrete fast path skipping the custom_vjp machinery).  ``validate``
@@ -444,7 +466,8 @@ def sharded_matmul(plan: SparsityPlan, a, b, *, bn: int, backend: str,
     ctx = ShardedVJP(
         backend=backend, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
         grad_backend=grad_backend, cache=plan_cache, key=plan_key,
-        compact_grid=compact_grid, policy=policy, axis=axis, balance=balance,
+        compact_grid=compact_grid, db=db,
+        policy=policy, axis=axis, balance=balance,
     )
     return sharded_planned_matmul(ctx, plan.nnz, plan.idx, a, b)
 
@@ -455,7 +478,7 @@ def sharded_matmul_fused(plan: SparsityPlan, a, b, *, bias=None,
                          axis: str = "M", balance: bool = True,
                          out_dtype=None, plan_cache=None, plan_key=None,
                          grad_backend=None, compact_grid="ragged",
-                         validate: str | None = None):
+                         validate: str | None = None, db=None):
     """Sharded fused matmul with the distributed VJP — the ``shard_map``
     twin of ``KernelBackend.matmul_fused``; returns ``(out, mask)``.
     ``validate`` as in :func:`sharded_matmul`."""
@@ -474,7 +497,7 @@ def sharded_matmul_fused(plan: SparsityPlan, a, b, *, bias=None,
     ctx = ShardedFusedVJP(
         backend=backend, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
         grad_backend=grad_backend, cache=plan_cache, key=plan_key,
-        activation=activation, compact_grid=compact_grid,
+        activation=activation, compact_grid=compact_grid, db=db,
         policy=policy, axis=axis, balance=balance,
     )
     return sharded_fused_matmul(ctx, plan.nnz, plan.idx, a, b, bias, residual)

@@ -40,6 +40,7 @@ from repro.runtime.plan import (
     unshard_plan,
 )
 from repro.runtime.runtime import (
+    GEOMETRIES,
     Runtime,
     active_mesh,
     active_policy,
@@ -51,6 +52,7 @@ from repro.runtime.runtime import (
 )
 
 __all__ = [
+    "GEOMETRIES",
     "Runtime",
     "use",
     "current",

@@ -42,8 +42,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.tensordash_spmm import plan_from_mask_csr, transpose_plan_csr
-from repro.runtime.plan import PlanCache, SparsityPlan
+from repro.kernels.tensordash_spmm import (
+    _check_compact_grid,
+    plan_from_mask_csr,
+    transpose_plan_csr,
+)
+from repro.runtime.plan import PlanCache, SparsityPlan, _fit_block
 
 __all__ = [
     "PlannedVJP",
@@ -62,9 +66,13 @@ class PlannedVJP:
     products (same registry; defaults to the primal's).  ``cache``/``key``
     opt the backward's plans into a :class:`PlanCache` (hashed by identity —
     two contexts sharing a cache compare equal only on the same cache).
-    ``compact_grid`` is the grid family (v3 ``"ragged"`` / v2 ``True`` / v1
-    ``False``) every product of this matmul — forward and both backward —
-    executes under; all three are bit-identical, only issued steps differ.
+    ``compact_grid`` is the grid family (``"ragged"`` v3 / ``"v2"`` /
+    ``"v1"``, normalized at construction) every product of this matmul
+    executes under by default; all three are bit-identical, only issued
+    steps differ.  ``db`` optionally carries a ``repro.tune`` TuningDB so
+    each *backward* product resolves its own tuned lane width and grid
+    family (:meth:`_bwd_policy`) — the transposed plan generally wants a
+    different geometry than the forward.
     """
 
     backend: str
@@ -76,26 +84,55 @@ class PlannedVJP:
     cache: PlanCache | None = None
     key: Any = None
     compact_grid: Any = "ragged"
+    db: Any = None  # optional repro.tune.TuningDB (hashed by identity)
+
+    def __post_init__(self):
+        # one canonical literal per mode, so jit's static-arg caches never
+        # see True/"v2" as two distinct contexts
+        object.__setattr__(
+            self, "compact_grid", _check_compact_grid(self.compact_grid)
+        )
 
     @property
     def bwd_backend(self) -> str:
         return self.grad_backend or self.backend
 
     def _execute(self, name, nnz, idx, a, b, *, bm, bk, bn, out_dtype,
-                 workqueue=None):
+                 workqueue=None, compact_grid=None):
         from repro.runtime.backends import KernelRequest, get_backend  # local: import cycle
 
         return get_backend(name).execute_planned(KernelRequest(
             nnz=nnz, idx=idx, a=a, b=b, bm=bm, bk=bk, bn=bn,
-            out_dtype=out_dtype, compact_grid=self.compact_grid,
+            out_dtype=out_dtype,
+            compact_grid=(self.compact_grid if compact_grid is None
+                          else compact_grid),
             workqueue=workqueue,
         ))
 
-    def _plan_workqueue(self, plan: SparsityPlan):
+    def _plan_workqueue(self, plan: SparsityPlan, mode=None):
         """The plan's CSR triple when the ragged grid will consume it (and
         the plan carries one), else ``None`` — the kernel derives it
-        in-graph for traced plans."""
-        return plan.workqueue() if self.compact_grid == "ragged" else None
+        in-graph for traced plans.  ``mode`` overrides the context's grid
+        family (a tuned backward product may run a different one)."""
+        mode = self.compact_grid if mode is None else mode
+        return plan.workqueue() if mode == "ragged" else None
+
+    def _bwd_policy(self, op, m, k, n, dtype, *, bn):
+        """Tuned ``(bn, compact_grid)`` for one backward product, resolved
+        from the riding TuningDB under the product's *own* key (``op`` is
+        ``"matmul_da"`` / ``"matmul_db"``) — the transposed plan generally
+        wants a different lane width and grid family than the forward.
+        Only those two knobs are free: ``bm/bk`` are pinned by the backward
+        plan's geometry (a metadata transform of the forward plan), which
+        keeps the tuned backward bit-identical to the default one.  Returns
+        ``(bn, None)`` — the context defaults — when no DB rides along or
+        the cell is unmeasured."""
+        if self.db is None:
+            return bn, None
+        pol = self.db.resolve(op=op, m=m, k=k, n=n, dtype=dtype)
+        if pol is None:
+            return bn, None
+        return _fit_block(pol.bn, n), pol.compact_grid
 
 
 def _is_traced(x) -> bool:
@@ -153,16 +190,22 @@ def planned_matmul_grads(ctx: PlannedVJP, nnz, idx, a, b, g):
     """
     g32 = g.astype(jnp.float32)
     pg = _cot_plan(ctx, g32)
+    bn_da, cg_da = ctx._bwd_policy(
+        "matmul_da", g.shape[0], g.shape[1], b.shape[0], a.dtype, bn=ctx.bk
+    )
     da = ctx._execute(
         ctx.bwd_backend, pg.nnz, pg.idx, g32, b.astype(jnp.float32).T,
-        bm=ctx.bm, bk=ctx.bn, bn=ctx.bk, out_dtype=a.dtype,
-        workqueue=ctx._plan_workqueue(pg),
+        bm=ctx.bm, bk=ctx.bn, bn=bn_da, out_dtype=a.dtype,
+        workqueue=ctx._plan_workqueue(pg, cg_da), compact_grid=cg_da,
     )
     pt = _lhs_t_plan(ctx, nnz, idx, a)
+    bn_db, cg_db = ctx._bwd_policy(
+        "matmul_db", a.shape[1], a.shape[0], g.shape[1], b.dtype, bn=ctx.bn
+    )
     db = ctx._execute(
         ctx.bwd_backend, pt.nnz, pt.idx, a.astype(jnp.float32).T, g32,
-        bm=ctx.bk, bk=ctx.bm, bn=ctx.bn, out_dtype=b.dtype,
-        workqueue=ctx._plan_workqueue(pt),
+        bm=ctx.bk, bk=ctx.bm, bn=bn_db, out_dtype=b.dtype,
+        workqueue=ctx._plan_workqueue(pt, cg_db), compact_grid=cg_db,
     )
     return da, db
 
@@ -307,18 +350,24 @@ def _fused_bwd(ctx: FusedVJP, res, cots):
             ctx.cache.traced += int(_is_traced(mask))
     else:
         pg = _cot_plan(ctx, g_pre)
+    bn_da, cg_da = ctx._bwd_policy(
+        "matmul_da", g.shape[0], g.shape[1], b.shape[0], a.dtype, bn=ctx.bk
+    )
     da = ctx._execute(
         ctx.bwd_backend, pg.nnz, pg.idx, g_pre, b.astype(jnp.float32).T,
-        bm=ctx.bm, bk=ctx.bn, bn=ctx.bk, out_dtype=a.dtype,
-        workqueue=ctx._plan_workqueue(pg),
+        bm=ctx.bm, bk=ctx.bn, bn=bn_da, out_dtype=a.dtype,
+        workqueue=ctx._plan_workqueue(pg, cg_da), compact_grid=cg_da,
     )
     # Eq. 3 (A*G): db = a.T @ g_pre, planned by metadata transpose of the
     # forward plan (shared with the unfused rule).
     pt = _lhs_t_plan(ctx, nnz, idx, a)
+    bn_db, cg_db = ctx._bwd_policy(
+        "matmul_db", a.shape[1], a.shape[0], g.shape[1], b.dtype, bn=ctx.bn
+    )
     db = ctx._execute(
         ctx.bwd_backend, pt.nnz, pt.idx, a.astype(jnp.float32).T, g_pre,
-        bm=ctx.bk, bk=ctx.bm, bn=ctx.bn, out_dtype=b.dtype,
-        workqueue=ctx._plan_workqueue(pt),
+        bm=ctx.bk, bk=ctx.bm, bn=bn_db, out_dtype=b.dtype,
+        workqueue=ctx._plan_workqueue(pt, cg_db), compact_grid=cg_db,
     )
     zero = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int plan metadata
     dbias = None if bias is None else jnp.sum(g_pre, axis=0).astype(bias.dtype)

@@ -84,6 +84,16 @@ class KernelRequest:
     compact_grid: Any = "ragged"
     workqueue: Any = None  # optional (row_starts, work_row, work_kblk)
 
+    def __post_init__(self):
+        from repro.kernels.tensordash_spmm import _check_compact_grid  # local: import cycle
+
+        # one canonical literal per grid family ("ragged"/"v2"/"v1";
+        # legacy True/False accepted), so the jitted kernels' static-arg
+        # caches never split on spelling
+        object.__setattr__(
+            self, "compact_grid", _check_compact_grid(self.compact_grid)
+        )
+
     def replace(self, **kw) -> "KernelRequest":
         return dataclasses.replace(self, **kw)
 
@@ -164,7 +174,7 @@ class KernelBackend:
 
     def matmul_planned(self, plan: SparsityPlan, a, b, *, bn: int, out_dtype=None,
                        plan_cache=None, plan_key=None, grad_backend=None,
-                       compact_grid="ragged"):
+                       compact_grid="ragged", db=None):
         """Planned ``a @ b`` with the sparsity-aware VJP.
 
         Training through any backend routes *both* gradient products (paper
@@ -173,7 +183,9 @@ class KernelBackend:
         transposed-weight plan across microbatches.  Under ``"ragged"`` the
         plan's cached work queue is handed straight to the kernel on the
         concrete (eager/serving) path; traced calls derive it in-graph, where
-        XLA hoists loop-invariant plans.
+        XLA hoists loop-invariant plans.  ``db`` optionally threads a
+        ``repro.tune`` TuningDB into the VJP so each backward product
+        resolves its own tuned lane width / grid family.
         """
         if _all_concrete(plan.nnz, plan.idx, a, b):
             return self.execute_planned(KernelRequest(
@@ -185,20 +197,21 @@ class KernelBackend:
         ctx = PlannedVJP(
             backend=self.name, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
             grad_backend=grad_backend, cache=plan_cache, key=plan_key,
-            compact_grid=compact_grid,
+            compact_grid=compact_grid, db=db,
         )
         return planned_matmul(ctx, plan.nnz, plan.idx, a, b)
 
     def matmul_fused(self, plan: SparsityPlan, a, b, *, bias=None, residual=None,
                      activation: str = "none", bn: int, out_dtype=None,
                      plan_cache=None, plan_key=None, grad_backend=None,
-                     compact_grid="ragged"):
+                     compact_grid="ragged", db=None):
         """Planned fused ``act(a @ b + bias) + residual`` with the
         sparsity-aware VJP; returns ``(out, mask)``.
 
         The backward rule's gradient products both take metadata-only plans:
         Eq. 3 via the forward plan's transpose, Eq. 2 via the emitted mask
-        (ReLU-family epilogues — see :class:`FusedVJP`).
+        (ReLU-family epilogues — see :class:`FusedVJP`).  ``db`` as in
+        :meth:`matmul_planned`.
         """
         if _all_concrete(plan.nnz, plan.idx, a, b, bias, residual):
             return self.execute_fused(KernelRequest(
@@ -211,7 +224,7 @@ class KernelBackend:
         ctx = FusedVJP(
             backend=self.name, bm=plan.bm, bk=plan.bk, bn=bn, out_dtype=out_dtype,
             grad_backend=grad_backend, cache=plan_cache, key=plan_key,
-            activation=activation, compact_grid=compact_grid,
+            activation=activation, compact_grid=compact_grid, db=db,
         )
         return fused_planned_matmul(ctx, plan.nnz, plan.idx, a, b, bias, residual)
 

@@ -38,6 +38,20 @@ __all__ = [
 ]
 
 
+def _fit_block(block: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``block`` (always >= 1).
+
+    The one geometry-clamping primitive: ``Runtime.fit``/``Runtime.lane``
+    and the autodiff backward products all fit tuned or policy block sizes
+    to operand dims through this, so planned execution never needs a dense
+    escape hatch for small or odd operands.
+    """
+    b = max(1, min(block, dim))
+    while dim % b:
+        b -= 1
+    return b
+
+
 @dataclasses.dataclass(frozen=True)
 class SparsityPlan:
     """Compacted effectual-block schedule for one 2-D operand.
@@ -139,9 +153,12 @@ class SparsityPlan:
         """Grid steps the planned kernel issues against ``nb`` output-column
         blocks, from cached host-side stats (no device sync after the first
         query; concrete plans only — tracers raise via :meth:`host_nnz`)."""
+        from repro.kernels.tensordash_spmm import _check_compact_grid  # local: keep import light
+
+        compact_grid = _check_compact_grid(compact_grid)
         if compact_grid == "ragged":
             return nb * self.total_work()
-        kdim = self.max_nnz() if compact_grid else self.k_blocks
+        kdim = self.max_nnz() if compact_grid == "v2" else self.k_blocks
         return self.block_rows * nb * kdim
 
     def density(self) -> float:

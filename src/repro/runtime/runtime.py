@@ -43,6 +43,7 @@ if False:  # import-time cycle (sharding -> models -> runtime); type-only
 from repro.runtime.plan import (
     PlanCache,
     SparsityPlan,
+    _fit_block,
     dense_operand_plan,
     plan_from_emitted_mask,
     plan_operand,
@@ -59,13 +60,7 @@ __all__ = [
     "cache_batch_axes",
 ]
 
-
-def _fit_block(block: int, dim: int) -> int:
-    """Largest divisor of ``dim`` that is <= ``block`` (always >= 1)."""
-    b = max(1, min(block, dim))
-    while dim % b:
-        b -= 1
-    return b
+GEOMETRIES = ("explicit", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,9 +75,21 @@ class Runtime:
     ``compact_grid`` picks the kernel grid family — bit-identical outputs,
     different issued work: ``"ragged"`` (default, v3) walks the plan's CSR
     work queue so steps equal effectual blocks exactly (``O(sum(nnz))``,
-    skew-immune); ``True`` (v2) bounds the K grid by the per-call
-    ``max(nnz)`` (one dense row drags all rows to dense cost); ``False``
-    (v1) issues the full gated grid — kept for A/B measurement.
+    skew-immune); ``"v2"`` bounds the K grid by the per-call ``max(nnz)``
+    (one dense row drags all rows to dense cost); ``"v1"`` issues the full
+    gated grid — kept for A/B measurement.  Legacy ``True``/``False`` are
+    accepted and normalized to ``"v2"``/``"v1"`` at construction.
+
+    ``geometry="auto"`` consults :attr:`tuning_db` (a
+    :class:`repro.tune.TuningDB`; discovered from disk when not passed) at
+    every execution method: the measured-best ``bm/bk/bn``/grid-family/fuse
+    policy for the call's ``(op, shape-bucket, dtype, density-bucket,
+    platform)`` key overlays the fields above, and unmeasured cells fall
+    back to them.  Construct via :meth:`tuned`.  Resolution never changes
+    numerics (the tuner only stores candidates verified bit-identical to
+    the reference backend at their geometry); with a caller-provided plan
+    only the lane width and grid family are tuned, since ``bm/bk`` are the
+    plan's own blocking.
 
     ``sharding`` is the declarative
     :class:`~repro.parallel.sharding.ShardingPolicy` — mesh, axis roles and
@@ -115,6 +122,11 @@ class Runtime:
     accum_dtype: Any = jnp.float32
     # static plan verification level ("off" | "boundary" | "full")
     validate: str = "off"
+    # geometry policy: "explicit" uses bm/bk/bn/compact_grid as given;
+    # "auto" overlays the measured-best policy from ``tuning_db`` per
+    # (op, shape-bucket, dtype, density-bucket, platform) — see repro.tune
+    geometry: str = "explicit"
+    tuning_db: Any = dataclasses.field(default=None, compare=False, repr=False)
 
     # -- construction ------------------------------------------------------
     def __post_init__(self):
@@ -122,15 +134,42 @@ class Runtime:
         from repro.kernels.tensordash_spmm import _check_compact_grid
 
         # fail at construction, not at the first kernel call deep in a
-        # model: a typo'd mode string would otherwise silently select v2
-        _check_compact_grid(self.compact_grid)
+        # model: a typo'd mode string would otherwise silently select v2.
+        # Stored normalized ("ragged"/"v2"/"v1") so jit static-arg caches
+        # and policy comparisons see one canonical value per mode.
+        object.__setattr__(
+            self, "compact_grid", _check_compact_grid(self.compact_grid)
+        )
         if self.validate not in LEVELS:
             raise ValueError(
                 f"validate={self.validate!r} not one of {LEVELS}"
             )
+        if self.geometry not in GEOMETRIES:
+            raise ValueError(
+                f"geometry={self.geometry!r} not one of {GEOMETRIES}"
+            )
+        if self.geometry == "auto" and self.tuning_db is None:
+            from repro.tune import default_db  # local: tune imports runtime
+
+            object.__setattr__(self, "tuning_db", default_db())
         # the cache is carried by handle; keep its gate in step with the
         # policy that owns it (replace() re-runs this on the same handle)
         self.plan_cache.validate = self.validate
+
+    @classmethod
+    def tuned(cls, db=None, *, path=None, **kw) -> "Runtime":
+        """A ``geometry="auto"`` runtime resolving from ``db`` (a
+        ``repro.tune.TuningDB``), from the file at ``path``, or from the
+        discovered default DB (``$REPRO_TUNING_DB`` > CWD > repo root).
+        Unmeasured cells fall back to the hand-tuned defaults, so an empty
+        or missing DB degrades to exactly ``Runtime(**kw)``."""
+        if db is not None and path is not None:
+            raise ValueError("Runtime.tuned: pass db= or path=, not both")
+        if path is not None:
+            from repro.tune import TuningDB  # local: tune imports runtime
+
+            db = TuningDB.load(path)
+        return cls(geometry="auto", tuning_db=db, **kw)
 
     def replace(self, **kw) -> "Runtime":
         return dataclasses.replace(self, **kw)
@@ -186,6 +225,54 @@ class Runtime:
             return self
         return self.replace(bm=bm, bk=bk, bn=bn)
 
+    @property
+    def _db(self):
+        """The TuningDB to thread into kernels/VJPs — only under
+        ``geometry="auto"`` (an explicit-geometry runtime never lets a DB
+        second-guess its hand-set policy, forward or backward)."""
+        return self.tuning_db if self.geometry == "auto" else None
+
+    def lane(self, dim: int, block: int | None = None) -> int:
+        """Fitted output-lane width: the largest divisor of ``dim`` that is
+        <= the target block (:attr:`bn` unless overridden) — the one
+        call-site clamp left now that :meth:`_resolved` owns geometry."""
+        return _fit_block(self.bn if block is None else block, dim)
+
+    def _policy(self, op: str, a_shape, b_shape, dtype, *, density=None):
+        """The tuned policy for one call site, or ``None`` (explicit
+        geometry, no DB, or a cold cell).  Warm lookups are one memoized
+        dict probe in the :class:`~repro.tune.TuningDB` — nothing the eager
+        serving path can measure (gated in ``autotune_micro``)."""
+        if self.geometry != "auto" or self.tuning_db is None:
+            return None
+        return self.tuning_db.resolve(
+            op=op, m=a_shape[0], k=a_shape[1], n=b_shape[1], dtype=dtype,
+            density=density,
+        )
+
+    def _resolved(self, op: str, a_shape, b_shape, dtype, *,
+                  plan: SparsityPlan | None = None, density=None) -> "Runtime":
+        """THE geometry-resolution path every execution method funnels
+        through — replaces the old scattered per-call ``_fit_block``
+        hand-fits.  Resolve the tuned policy for ``op`` (``geometry="auto"``
+        only), overlay it on this runtime's defaults, then clamp to the
+        operand shapes.  With a caller-provided ``plan``, the plan's own
+        blocking governs ``bm/bk`` (changing them would reassociate the
+        block accumulation); only the lane width and grid family stay free
+        to tune — the same contract the backward products follow
+        (``PlannedVJP._bwd_policy``)."""
+        pol = self._policy(op, a_shape, b_shape, dtype, density=density)
+        rt = self
+        if pol is not None:
+            if plan is None:
+                new = (pol.bm, pol.bk, pol.bn, pol.compact_grid)
+                if new != (rt.bm, rt.bk, rt.bn, rt.compact_grid):
+                    rt = rt.replace(bm=pol.bm, bk=pol.bk, bn=pol.bn,
+                                    compact_grid=pol.compact_grid)
+            elif (pol.bn, pol.compact_grid) != (rt.bn, rt.compact_grid):
+                rt = rt.replace(bn=pol.bn, compact_grid=pol.compact_grid)
+        return rt if plan is not None else rt.fit(a_shape, b_shape)
+
     def supports_matmul(self, a_shape, b_shape, *, side: str = "A") -> bool:
         """Can the backend run ``a @ b`` block-sparse here?  Geometry always
         fits (it auto-clamps, see :meth:`fit`); only the platform can say no."""
@@ -210,7 +297,8 @@ class Runtime:
             b = b.astype(self.compute_dtype)
         return a, b
 
-    def matmul(self, a, b, *, plan: SparsityPlan | None = None, plan_key=None, side: str = "A"):
+    def matmul(self, a, b, *, plan: SparsityPlan | None = None, plan_key=None,
+               side: str = "A", op: str = "matmul", density=None):
         """``a @ b`` on this runtime's backend.
 
         ``side="A"`` (default) exploits dynamic sparsity of ``a``;
@@ -220,26 +308,34 @@ class Runtime:
         amortization path.  Block geometry auto-clamps to the operand shapes
         (:meth:`fit`): there is no silent dense fallback for small operands.
 
+        ``op`` names this call site's tuning key (``geometry="auto"``): a
+        distinct op — ``"moe_expert"``, a custom pipeline stage — resolves
+        its own measured policy even at shapes another op shares.
+        ``density`` optionally refines the key to the operand's
+        density-bucket; ``None`` resolves the ``"any"`` bucket.
+
         Differentiable: ``jax.grad`` through a planned matmul executes both
         gradient products (paper Eq. 2-3) through the backend registry with
         their own ``SparsityPlan``s (see ``repro.runtime.autodiff``); the
-        plan cache rides along so eager backward passes reuse the static
+        plan cache — and the TuningDB, so each backward product resolves its
+        own key — ride along, and eager backward passes reuse the static
         transposed-weight plan across microbatches.
         """
         a, b = self._dtype_prologue(a, b)
         kernel = self.kernel
         if not kernel.sparse and plan is None and plan_key is None:
             return kernel.matmul(a, b, bm=self.bm, bk=self.bk, bn=self.bn)
-        # clamp block geometry to the operand shapes; with an explicit plan
-        # the plan's own geometry governs and only the lane dim is fitted
-        rt = self if plan is not None else self.fit(a.shape, b.shape)
+        # one resolution path: tuned-policy overlay + shape clamp; with an
+        # explicit plan its geometry governs and only the lane dim is fitted
+        rt = self._resolved(op, a.shape, b.shape, a.dtype, plan=plan,
+                            density=density)
         if side == "B":
             if plan is None:
                 plan = rt.plan(b, key=plan_key, side="B")
             out_t = kernel.matmul_planned(
-                plan, b.T, a.T, bn=_fit_block(rt.bm, a.shape[0]), out_dtype=a.dtype,
+                plan, b.T, a.T, bn=rt.lane(a.shape[0], rt.bm), out_dtype=a.dtype,
                 plan_cache=self.plan_cache, plan_key=("B", plan_key),
-                compact_grid=self.compact_grid,
+                compact_grid=rt.compact_grid, db=self._db,
             )
             return out_t.T
         if plan is None:
@@ -252,14 +348,15 @@ class Runtime:
             else:
                 plan = rt.plan(a, key=plan_key)
         return kernel.matmul_planned(
-            plan, a, b, bn=_fit_block(rt.bn, b.shape[1]), out_dtype=a.dtype,
+            plan, a, b, bn=rt.lane(b.shape[1]), out_dtype=a.dtype,
             plan_cache=self.plan_cache, plan_key=("A", plan_key),
-            compact_grid=self.compact_grid,
+            compact_grid=rt.compact_grid, db=self._db,
         )
 
     def matmul_fused(self, a, b, *, bias=None, residual=None,
                      activation: str = "none", plan: SparsityPlan | None = None,
-                     plan_key=None, assume_dense: bool = False):
+                     plan_key=None, assume_dense: bool = False,
+                     op: str = "matmul_fused", density=None):
         """Fused ``act(a @ b + bias) + residual`` on this runtime's backend,
         returning ``(out, mask)``.
 
@@ -276,7 +373,8 @@ class Runtime:
         """
         a, b = self._dtype_prologue(a, b)
         kernel = self.kernel
-        rt = self if plan is not None else self.fit(a.shape, b.shape)
+        rt = self._resolved(op, a.shape, b.shape, a.dtype, plan=plan,
+                            density=density)
         if not kernel.sparse and plan is None and plan_key is None:
             # dense shortcut (mirrors matmul's, including the plan_key
             # condition: a keyed call routes through the planned path so the
@@ -289,7 +387,7 @@ class Runtime:
                 jnp.dot(a, b, preferred_element_type=jnp.float32),
                 bias, residual, activation,
             )
-            bm_f, bn_f = rt.bm, _fit_block(rt.bn, b.shape[1])
+            bm_f, bn_f = rt.bm, rt.lane(b.shape[1])
             m, n = out32.shape
             mask = jnp.any(
                 out32.reshape(m // bm_f, bm_f, n // bn_f, bn_f) != 0, axis=(1, 3)
@@ -303,9 +401,9 @@ class Runtime:
                 plan = rt.plan(a, key=plan_key)
         return kernel.matmul_fused(
             plan, a, b, bias=bias, residual=residual, activation=activation,
-            bn=_fit_block(rt.bn, b.shape[1]), out_dtype=a.dtype,
+            bn=rt.lane(b.shape[1]), out_dtype=a.dtype,
             plan_cache=self.plan_cache, plan_key=("A", plan_key),
-            compact_grid=self.compact_grid,
+            compact_grid=rt.compact_grid, db=self._db,
         )
 
     def plan_for_fused_output(self, mask, h, w) -> SparsityPlan:
@@ -338,12 +436,14 @@ class Runtime:
         from repro.runtime.autodiff import PlannedVJP, planned_matmul_grads
 
         if plan is None:
-            plan = self.fit(a.shape, b.shape).plan(a, key=plan_key)
+            plan = self._resolved(
+                "matmul", a.shape, b.shape, a.dtype
+            ).plan(a, key=plan_key)
         ctx = PlannedVJP(
             backend=self.backend, bm=plan.bm, bk=plan.bk,
-            bn=_fit_block(self.bn, g.shape[1]),
+            bn=self.lane(g.shape[1]),
             cache=self.plan_cache, key=("A", plan_key),
-            compact_grid=self.compact_grid,
+            compact_grid=self.compact_grid, db=self._db,
         )
         return planned_matmul_grads(ctx, plan.nnz, plan.idx, a, b, g)
 
@@ -373,16 +473,16 @@ class Runtime:
         if policy is None or policy.mesh is None:
             return self.matmul(a, b, plan=plan, plan_key=plan_key)
         a, b = self._dtype_prologue(a, b)
-        rt = self if plan is not None else self.fit(a.shape, b.shape)
+        rt = self._resolved("matmul", a.shape, b.shape, a.dtype, plan=plan)
         if plan is None:
             rt.kernel.check_platform()
             plan = rt.plan(a, key=plan_key)
         return spmm.sharded_matmul(
-            plan, a, b, bn=_fit_block(rt.bn, b.shape[1]),
+            plan, a, b, bn=rt.lane(b.shape[1]),
             backend=self.backend, policy=policy, axis=axis, balance=balance,
             out_dtype=a.dtype, plan_cache=self.plan_cache,
-            plan_key=("A", plan_key), compact_grid=self.compact_grid,
-            validate=self.validate,
+            plan_key=("A", plan_key), compact_grid=rt.compact_grid,
+            validate=self.validate, db=self._db,
         )
 
     def matmul_fused_sharded(self, a, b, *, bias=None, residual=None,
@@ -404,7 +504,7 @@ class Runtime:
                 plan=plan, plan_key=plan_key, assume_dense=assume_dense,
             )
         a, b = self._dtype_prologue(a, b)
-        rt = self if plan is not None else self.fit(a.shape, b.shape)
+        rt = self._resolved("matmul_fused", a.shape, b.shape, a.dtype, plan=plan)
         rt.kernel.check_platform()
         if plan is None:
             if assume_dense:
@@ -413,23 +513,29 @@ class Runtime:
                 plan = rt.plan(a, key=plan_key)
         return spmm.sharded_matmul_fused(
             plan, a, b, bias=bias, residual=residual, activation=activation,
-            bn=_fit_block(rt.bn, b.shape[1]), backend=self.backend,
+            bn=rt.lane(b.shape[1]), backend=self.backend,
             policy=policy, axis=axis, balance=balance, out_dtype=a.dtype,
             plan_cache=self.plan_cache, plan_key=("A", plan_key),
-            compact_grid=self.compact_grid, validate=self.validate,
+            compact_grid=rt.compact_grid, validate=self.validate, db=self._db,
         )
 
     def sparse_ffn(self, x, w1, w2, *, activation: str = "relu"):
         """FFN whose second matmul exploits the activation sparsity the
         first one produced (the framework's main kernel consumer).
 
-        Sparse backends run the fused + emitted-plan path: the first matmul
-        applies the activation inside its store step (no HBM round-trip)
-        and emits the intermediate's block-nonzero mask, from which the
-        second matmul's :class:`SparsityPlan` is built as a pure metadata
-        transform — the per-call replanning pass over the intermediate's
-        values (the old ``argsort`` bottleneck in ``plan_cache_micro``) is
-        gone.  Dense backends keep the plain two-dot formulation.
+        Sparse backends default to the fused + emitted-plan path: the first
+        matmul applies the activation inside its store step (no HBM
+        round-trip) and emits the intermediate's block-nonzero mask, from
+        which the second matmul's :class:`SparsityPlan` is built as a pure
+        metadata transform — the per-call replanning pass over the
+        intermediate's values (the old ``argsort`` bottleneck in
+        ``plan_cache_micro``) is gone.  Under ``geometry="auto"`` the
+        fuse-or-not choice itself is measured: the ``"ffn"`` op's tuned
+        policy can select the unfused chain (plan the intermediate by
+        value) where that A/B won — the fuse decision is the one tuned
+        knob that is allclose-not-bitwise, since fusion moves where the
+        activation's rounding happens.  Dense backends keep the plain
+        two-dot formulation.
         """
         if activation not in ("relu", "squared_relu"):
             raise ValueError(activation)
@@ -443,10 +549,20 @@ class Runtime:
             h = h.astype(x.dtype)
             out = self.matmul(h, w2)
             return out.reshape(*lead, w2.shape[-1])
+        pol = self._policy("ffn", x2.shape, w1.shape, x.dtype)
+        if pol is not None and not pol.fuse:
+            h = self.matmul(x2, w1).astype(jnp.float32)
+            h = jnp.maximum(h, 0.0)
+            if activation == "squared_relu":
+                h = jnp.square(h)
+            h = h.astype(x.dtype)
+            out = self.matmul(h, w2, op="ffn")
+            return out.reshape(*lead, w2.shape[-1])
         h, mask = self.matmul_fused(
             x2, w1, activation=activation, assume_dense=True
         )
-        out = self.matmul(h, w2, plan=self.plan_for_fused_output(mask, h, w2))
+        out = self.matmul(h, w2, plan=self.plan_for_fused_output(mask, h, w2),
+                          op="ffn")
         return out.reshape(*lead, w2.shape[-1])
 
     # -- serving cache layout ---------------------------------------------

@@ -230,6 +230,15 @@ class ServeEngine:
         self.params = params
         self.cfg = cfg
         self.rt = rtm.resolve(rt)
+        if self.rt.geometry == "auto" and self.rt.tuning_db is not None:
+            # prewarm the TuningDB memo for the decode hot-path cells (FFN
+            # up/down projections at slot-batch width) so the first jitted
+            # decode trace resolves against a warm probe instead of paying
+            # the cold bucket-and-lookup inside tracing
+            d_ff = cfg.d_ff or cfg.d_model * 4
+            for op, kdim, ndim in (("matmul", cfg.d_model, d_ff),
+                                   ("ffn", d_ff, cfg.d_model)):
+                self.rt._policy(op, (slots, kdim), (kdim, ndim), jnp.float32)
         self.max_len = int(max_len)
         self.temperature = float(temperature)
         self.eos_id = eos_id

@@ -137,6 +137,17 @@ def make_train_step(
     refreshes — regrown blocks restart from zero, no straight-through
     estimator needed.
     """
+    rt = rtm.resolve(None)
+    if rt.geometry == "auto" and (rt.tuning_db is None or len(rt.tuning_db) == 0):
+        import warnings
+
+        warnings.warn(
+            "make_train_step under Runtime(geometry='auto') with an empty "
+            "TuningDB: every cell resolves cold to the hand-tuned defaults. "
+            "Pre-populate with `python -m repro.tune --configs <arch>` "
+            "(see README #autotuning).",
+            stacklevel=2,
+        )
     policy = rtm.active_policy()
     mesh = policy.mesh
     loss_fn = _make_loss(cfg, mesh)

@@ -1,0 +1,63 @@
+"""HASS-style geometry & mode autotuner (see README §Autotuning).
+
+The policy vector the runtime used to hand-pick per call site — ``(bm, bk,
+bn)`` tile geometry, grid family (``ragged``/``v2``/``v1``), fuse-or-not,
+backend — is searched by **measurement** per key ``(op, M/K/N shape-bucket,
+dtype, density-bucket, platform)`` and persisted in a :class:`TuningDB`
+(JSON on disk, keyed and validated like the ``PlanCache``).  A
+``Runtime(geometry="auto")`` — or ``Runtime.tuned()`` — consults it at
+every execution method; unmeasured cells fall back to the hand-tuned
+defaults, and the search harness only ever stores candidates whose outputs
+were bit-identical to the reference backend, so tuning can never change
+numerics.
+
+Offline pre-population::
+
+    python -m repro.tune --configs smoke,deepseek_7b
+
+and in code::
+
+    rt = Runtime.tuned(backend="reference")       # discovered default DB
+    rt = Runtime.tuned(path="TUNING_db.json")     # explicit file
+"""
+from repro.tune.db import (
+    DB_VERSION,
+    DENSITY_EDGES,
+    PolicyKey,
+    TunedPolicy,
+    TuningDB,
+    default_db,
+    default_db_path,
+    density_bucket,
+    shape_bucket,
+)
+from repro.tune.search import (
+    STANDARD_DENSITIES,
+    STANDARD_MICRO_SHAPES,
+    candidate_policies,
+    measure_candidate,
+    prior_score,
+    seed_from_history,
+    tune_cells,
+    tune_matmul,
+)
+
+__all__ = [
+    "DB_VERSION",
+    "DENSITY_EDGES",
+    "PolicyKey",
+    "TunedPolicy",
+    "TuningDB",
+    "default_db",
+    "default_db_path",
+    "density_bucket",
+    "shape_bucket",
+    "STANDARD_DENSITIES",
+    "STANDARD_MICRO_SHAPES",
+    "candidate_policies",
+    "measure_candidate",
+    "prior_score",
+    "seed_from_history",
+    "tune_cells",
+    "tune_matmul",
+]
