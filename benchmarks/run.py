@@ -632,6 +632,82 @@ def bench_serve_decode():
     )
 
 
+def bench_serve_chaos():
+    """Resilience-layer cost + containment, gated.
+
+    (a) The no-fault overhead of the hardened serve loop — in-graph
+    ``isfinite`` watchdog, per-request deadlines, priority admission —
+    must stay under 2% of the bare (watchdog-off, no-TTL) engine replay
+    (best-of-N with bounded re-measures: CPU runner noise, not policy,
+    gets the retries).
+
+    (b) A poisoned replay must be *contained*: the NaN slot's request
+    errors, every healthy batch-mate's token stream is bit-identical to a
+    clean run, and the event lands in the ``ResilienceLog``.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs.base import ModelConfig
+    from repro.models import model as M
+    from repro.models.common import init_params
+    from repro.resilience import FaultPlan, ResilienceLog
+    from repro.serve.engine import ServeEngine
+
+    cfg = ModelConfig(
+        name="serve-bench", family="dense", num_layers=2, d_model=32,
+        vocab_size=64, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        activation="relu", q_chunk=16, remat=False,
+    )
+    params = init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(8)]
+
+    def replay(*, watchdog, ttl=None, fault_plan=None, log=None):
+        eng = ServeEngine(params, cfg, slots=4, max_len=32, chunk=8, seed=0,
+                          watchdog=watchdog, fault_plan=fault_plan, log=log)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=12, priority=i % 3, ttl=ttl)
+        return eng, eng.run()
+
+    # warm both decode-program variants (watchdog is a jit static)
+    replay(watchdog=True, ttl=60.0)
+    replay(watchdog=False)
+    hard_us = _best_of(lambda: replay(watchdog=True, ttl=60.0), reps=7)
+    bare_us = _best_of(lambda: replay(watchdog=False), reps=7)
+    overhead = hard_us / bare_us - 1.0
+    for _ in range(2):  # bounded re-measures: absorb runner jitter
+        if overhead < 0.02:
+            break
+        hard_us = min(hard_us, _best_of(lambda: replay(watchdog=True, ttl=60.0), reps=7))
+        bare_us = min(bare_us, _best_of(lambda: replay(watchdog=False), reps=7))
+        overhead = hard_us / bare_us - 1.0
+    assert overhead < 0.02, (
+        f"resilience hardening costs {overhead:.1%} on the no-fault path "
+        f"(gate: <2%): hardened={hard_us:.0f}us bare={bare_us:.0f}us"
+    )
+
+    # containment: poison one slot, healthy slots bit-identical to clean
+    _, clean = replay(watchdog=True, ttl=60.0)
+    log = ResilienceLog()
+    eng, faulted = replay(watchdog=True, ttl=60.0, log=log,
+                          fault_plan=FaultPlan.parse("nan_logits@0:slot=1"))
+    victims = [r.rid for r in eng._requests.values()
+               if r.finish_reason == "error"]
+    assert victims, "watchdog missed the poisoned slot"
+    healthy = [rid for rid in clean if rid not in victims]
+    assert healthy and all(faulted[rid] == clean[rid] for rid in healthy), (
+        "a poisoned slot perturbed a healthy batch-mate"
+    )
+    assert log.counts().get(("nonfinite", "retire-slot")), "event not logged"
+    return hard_us, (
+        f"overhead={overhead:+.1%} hardened={hard_us:.0f}us "
+        f"bare={bare_us:.0f}us contained={len(victims)}fault/"
+        f"{len(healthy)}healthy-bitident"
+    )
+
+
 def bench_dst_train():
     """Dynamic sparse training micro: the two subsystem claims, gated.
 
@@ -876,6 +952,7 @@ BENCHES = [
     ("plan_verify_micro", bench_plan_verify),
     ("backward_planned_micro", bench_backward_planned),
     ("serve_decode_micro", bench_serve_decode),
+    ("serve_chaos_micro", bench_serve_chaos),
     ("dst_train_micro", bench_dst_train),
     ("autotune_micro", bench_autotune),
     ("arch_tensordash_projection", bench_arch_projection),
@@ -892,6 +969,7 @@ SMOKE = {
     "plan_verify_micro",
     "backward_planned_micro",
     "serve_decode_micro",
+    "serve_chaos_micro",
     "dst_train_micro",
     "autotune_micro",
 }

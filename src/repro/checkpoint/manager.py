@@ -24,7 +24,7 @@ import numpy as np
 
 _EXTENDED = {"bfloat16": ml_dtypes.bfloat16, "float8_e4m3fn": ml_dtypes.float8_e4m3fn}
 
-__all__ = ["save", "restore", "latest_step", "PreemptionGuard"]
+__all__ = ["save", "restore", "restore_latest", "latest_step", "PreemptionGuard"]
 
 _SEP = "/"
 
@@ -125,6 +125,33 @@ def restore(directory: str, step: int, like, *, shardings=None):
         restored = [jax.numpy.asarray(a) for a in restored]
     del flat_names
     return jax.tree.unflatten(treedef, restored)
+
+
+def restore_latest(directory: str, like, *, shardings=None):
+    """Load the newest *readable* checkpoint: ``(step, tree)``.
+
+    Graceful degradation for on-disk corruption (a torn write that somehow
+    survived the atomic rename, bit rot, a truncated copy): a checkpoint
+    that fails to load is skipped — loudly, with a warning and a
+    ``ResilienceLog`` event — and the next-older one is tried.  Returns
+    ``(None, None)`` when no checkpoint is readable (callers start fresh).
+    """
+    import warnings
+
+    from repro.resilience.log import record as _record
+
+    for step in reversed(all_steps(directory)):
+        try:
+            return step, restore(directory, step, like, shardings=shardings)
+        except Exception as e:  # np.load/json/KeyError zoo — skip, try older
+            warnings.warn(
+                f"checkpoint step {step} in {directory!r} is unreadable "
+                f"({type(e).__name__}: {e}); trying an older checkpoint",
+                RuntimeWarning, stacklevel=2,
+            )
+            _record("checkpoint", "checkpoint.restore_latest", "skip-corrupt",
+                    step=step, error=f"{type(e).__name__}: {e}")
+    return None, None
 
 
 class PreemptionGuard:

@@ -12,10 +12,19 @@ jittered per request so the engine's slot backfill actually exercises.  One
 backend, block geometry, mesh, plan cache); the decode loop is one jitted
 ``lax.scan`` program whose trace count and plan-cache hit rates are printed
 alongside the latency percentiles.
+
+Resilience: ``--inject-faults`` replays a seeded
+:class:`repro.resilience.FaultPlan` (``nan_logits@1:slot=0`` ...) through
+the exact production serve loop; ``--ttl``/``--max-pending``/
+``--work-budget`` exercise deadlines, bounded admission, and plan-aware
+load shedding.  Finish-reason counts and the
+:class:`repro.resilience.ResilienceLog` summary are printed with the
+report; the replay exits non-zero when *no* request finishes cleanly.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -27,15 +36,24 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.models.common import init_params
 from repro.parallel.sharding import ShardingPolicy
+from repro.resilience import FaultPlan, ResilienceLog, capture_warnings
+from repro.resilience import faults as rfaults
+from repro.resilience import log as rlog
 from repro.serve import engine as serve_engine
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import QueueFull, ServeEngine
 
 
 def _pct(xs, q):
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+    """Percentile, or ``None`` for an empty sample (an all-failed replay
+    has no finished requests — report n/a, never a NaN latency)."""
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else None
 
 
-def main() -> None:
+def _ms(x):
+    return f"{x * 1e3:.0f}ms" if x is not None else "n/a"
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--smoke", action="store_true")
@@ -57,7 +75,20 @@ def main() -> None:
     ap.add_argument("--geometry", default="explicit", choices=rtm.GEOMETRIES,
                     help="'auto' resolves tile geometry / grid family per "
                          "call site from the TuningDB (python -m repro.tune)")
-    args = ap.parse_args()
+    ap.add_argument("--inject-faults", default="", metavar="SPEC",
+                    help="seeded fault replay, e.g. 'nan_logits@1:slot=0' "
+                         "(repro.resilience.FaultPlan grammar)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--ttl", type=float, default=None,
+                    help="per-request deadline (seconds after submit)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bounded admission queue (QueueFull beyond this)")
+    ap.add_argument("--work-budget", type=float, default=None,
+                    help="plan-aware load shedding: max outstanding decode "
+                         "work (cached-plan total_work units)")
+    ap.add_argument("--no-watchdog", action="store_true",
+                    help="disable the in-graph non-finite logits watchdog")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     mesh = None
@@ -83,10 +114,16 @@ def main() -> None:
     arrivals = (np.zeros(args.requests) if args.rate <= 0
                 else np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests)))
 
+    log = ResilienceLog()
+    fp = FaultPlan.parse(args.inject_faults, seed=args.fault_seed)
+
     max_len = args.max_len or (args.prompt_len + args.new)
     eng = ServeEngine(
         params, cfg, slots=args.slots, max_len=max_len, rt=rt,
         temperature=args.temperature, seed=args.seed, chunk=args.chunk,
+        max_pending=args.max_pending, work_budget=args.work_budget,
+        watchdog=not args.no_watchdog, fault_plan=fp if fp else None,
+        log=log,
     )
     # arrivals are scheduled on the engine clock, so latency percentiles
     # measure from the modeled arrival — queueing delay (a request waiting
@@ -94,22 +131,29 @@ def main() -> None:
     arrivals = arrivals + eng.now()
     t_start = time.monotonic()
     submitted = 0
-    while submitted < args.requests or eng.sched.has_work:
-        now = eng.now()
-        while submitted < args.requests and arrivals[submitted] <= now:
-            eng.submit(prompts[submitted], max_new=int(budgets[submitted]),
-                       arrival=float(arrivals[submitted]))
-            submitted += 1
-        if not eng.sched.has_work:
-            # idle before the next arrival: wait it out
-            time.sleep(min(max(arrivals[submitted] - now, 0.0), 0.05))
-            continue
-        eng.step()
+    with rlog.use_log(log), rfaults.inject(fp), capture_warnings(log):
+        while submitted < args.requests or eng.sched.has_work:
+            now = eng.now()
+            while submitted < args.requests and arrivals[submitted] <= now:
+                try:
+                    eng.submit(prompts[submitted],
+                               max_new=int(budgets[submitted]),
+                               arrival=float(arrivals[submitted]),
+                               ttl=args.ttl)
+                    submitted += 1
+                except QueueFull:
+                    break  # drain a chunk below, then retry this submit
+            if not eng.sched.has_work:
+                # idle before the next arrival: wait it out
+                time.sleep(min(max(arrivals[submitted] - now, 0.0), 0.05))
+                continue
+            eng.step()
     dt = time.monotonic() - t_start
 
     reqs = list(eng._requests.values())
-    ttft = [r.t_first - r.arrival for r in reqs]
-    e2e = [r.t_finish - r.arrival for r in reqs if r.finished]
+    ok = [r for r in reqs if r.ok]
+    ttft = [r.t_first - r.arrival for r in reqs if r.t_first > 0.0]
+    e2e = [r.t_finish - r.arrival for r in ok]
     st = eng.stats()
     pc = st["plan_cache"]
     print(f"arch={cfg.name} backend={rt.backend} slots={args.slots} "
@@ -117,8 +161,15 @@ def main() -> None:
     print(f"served {st['tokens_out']} tokens in {dt:.2f}s "
           f"({st['tokens_out']/dt:.1f} tok/s); decode program traced "
           f"{st['decode_traces']}x, {st['chunks_run']} chunks")
-    print(f"latency  ttft p50={_pct(ttft,50)*1e3:.0f}ms p95={_pct(ttft,95)*1e3:.0f}ms"
-          f"   e2e p50={_pct(e2e,50)*1e3:.0f}ms p95={_pct(e2e,95)*1e3:.0f}ms")
+    print(f"latency  ttft p50={_ms(_pct(ttft,50))} p95={_ms(_pct(ttft,95))}"
+          f"   e2e p50={_ms(_pct(e2e,50))} p95={_ms(_pct(e2e,95))}")
+    reasons: dict[str, int] = {}
+    for r in reqs:
+        reasons[r.finish_reason or "unfinished"] = (
+            reasons.get(r.finish_reason or "unfinished", 0) + 1
+        )
+    print("finish reasons: " + ", ".join(
+        f"{k}={v}" for k, v in sorted(reasons.items())))
     print(f"plan cache: {pc['hits']} hits / {pc['misses']} misses / "
           f"{pc['traced']} traced-in-program")
     # per-plan skew report: total_work is the exact v3 ragged-grid step
@@ -135,6 +186,11 @@ def main() -> None:
             # max/mean per-device ragged-grid steps under the serpentine deal
             line += f" imbalance={ps['imbalance']:.2f}x over {n_shards} devices"
         print(line)
+    if len(log):
+        print(log.summary())
+    if not ok:
+        print("ERROR: no request finished cleanly", file=sys.stderr)
+        sys.exit(2)
 
 
 if __name__ == "__main__":

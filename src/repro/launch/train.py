@@ -8,17 +8,31 @@ process per host, jax.distributed); on this CPU container ``--smoke`` runs
 the reduced config end-to-end with the identical code path: mesh, sharded
 params, checkpointing, preemption guard, straggler deadline, TensorDash
 sparsity projection.
+
+Resilience: the step is non-finite-guarded (``make_train_step(
+guard_nonfinite=True)``) — a NaN/Inf loss or gradient skips the update,
+backs off exponentially, and after ``--max-faults`` *consecutive* faulted
+steps checkpoints-before-abort (exit code 3).  ``--inject-faults`` replays
+a seeded :class:`repro.resilience.FaultPlan` (``nan_loss@3;step_stall@5:
+secs=1`` ...) through the exact production loop, and every degradation —
+skip-step, straggler abort, preemption save, corrupt-checkpoint skip — is
+surfaced in the :class:`repro.resilience.ResilienceLog` summary.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import signal
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 from repro import runtime as rtm
-from repro.checkpoint.manager import PreemptionGuard, latest_step, restore, save
+from repro.checkpoint.manager import PreemptionGuard, restore_latest, save
+from repro.resilience import FaultPlan, ResilienceLog, capture_warnings
+from repro.resilience import faults as rfaults
+from repro.resilience import log as rlog
 from repro.configs import get_config, reduce_config
 from repro.data.pipeline import SyntheticLM
 from repro.launch.mesh import make_local_mesh, make_production_mesh
@@ -57,7 +71,7 @@ def parse_dynamic_sparsity(spec: str) -> dict:
     return kw
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
@@ -69,7 +83,9 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--step-deadline", type=float, default=300.0,
-                    help="straggler mitigation: abort+checkpoint if a step exceeds this")
+                    help="straggler mitigation: abort+checkpoint if a step "
+                         "exceeds this (the first executed step is exempt: "
+                         "it pays trace+compile)")
     ap.add_argument("--backend", default="dense", choices=rtm.available_backends(),
                     help="kernel backend for the TensorDash sparse paths")
     ap.add_argument("--sparsity-taps", action="store_true",
@@ -87,7 +103,19 @@ def main() -> None:
     ap.add_argument("--geometry", default="explicit", choices=rtm.GEOMETRIES,
                     help="'auto' resolves tile geometry / grid family per "
                          "call site from the TuningDB (python -m repro.tune)")
-    args = ap.parse_args()
+    ap.add_argument("--inject-faults", default="", metavar="SPEC",
+                    help="seeded fault replay, e.g. 'nan_loss@3;step_stall@5:"
+                         "secs=1' (repro.resilience.FaultPlan grammar)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--max-faults", type=int, default=3,
+                    help="consecutive non-finite steps before checkpoint+abort")
+    ap.add_argument("--fault-backoff", type=float, default=0.5,
+                    help="base seconds for exponential backoff after a "
+                         "skipped (non-finite) step")
+    ap.add_argument("--no-nonfinite-guard", action="store_true",
+                    help="disable the in-graph skip-step guard on non-finite "
+                         "loss/grads")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -108,9 +136,14 @@ def main() -> None:
                      geometry=args.geometry, **geom)
     rt.kernel.check_platform()  # fail fast (e.g. pallas on CPU) vs silent dense fallback
 
+    log = ResilienceLog()
+    fp = FaultPlan.parse(args.inject_faults, seed=args.fault_seed)
+    guard_nonfinite = not args.no_nonfinite_guard
+
     specs = M.param_specs(cfg)
     shardings = policy.param_shardings(specs)
-    with mesh, rtm.use(rt):
+    with mesh, rtm.use(rt), rlog.use_log(log), rfaults.inject(fp), \
+            capture_warnings(log):
         params = jax.jit(
             lambda k: init_params(specs, k), out_shardings=shardings
         )(jax.random.PRNGKey(0))
@@ -135,23 +168,56 @@ def main() -> None:
         step_fn = jax.jit(make_train_step(
             cfg, ocfg, microbatches=args.microbatches,
             sparsity_taps=args.sparsity_taps, dynamic_sparsity=ctrl,
+            guard_nonfinite=guard_nonfinite,
         ))
         guard = PreemptionGuard()
 
         start = 0
-        if args.ckpt_dir and (s := latest_step(args.ckpt_dir)) is not None:
-            state = restore(args.ckpt_dir, s, {"params": params, "opt": opt})
-            params, opt, start = state["params"], state["opt"], s
-            print(f"resumed at step {s}")
+        if args.ckpt_dir:
+            s, state = restore_latest(
+                args.ckpt_dir, {"params": params, "opt": opt}
+            )
+            if s is not None:
+                params, opt, start = state["params"], state["opt"], s
+                print(f"resumed at step {s}")
 
+        consecutive_faults = 0
         for i in range(start, args.steps):
+            for _ in fp.fires("preempt", i):
+                signal.raise_signal(signal.SIGTERM)
             t0 = time.time()
+            rfaults.stall(fp, "step_stall", i)
+            kw = {}
+            if guard_nonfinite:
+                kw["poison"] = jnp.int32(rfaults.train_poison(fp, i))
             if ctrl is not None:
-                params, opt, m = step_fn(params, opt, data.batch_at(i), masks)
+                params, opt, m = step_fn(params, opt, data.batch_at(i),
+                                         masks, **kw)
             else:
-                params, opt, m = step_fn(params, opt, data.batch_at(i))
+                params, opt, m = step_fn(params, opt, data.batch_at(i), **kw)
             m = jax.device_get(m)
             dt = time.time() - t0
+            if guard_nonfinite and int(m.get("nonfinite", 0)):
+                consecutive_faults += 1
+                log.record("nonfinite", "train.step", "skip-step",
+                           step=i, consecutive=consecutive_faults)
+                print(f"step {i}: non-finite loss/grads — update skipped "
+                      f"({consecutive_faults}/{args.max_faults} consecutive)")
+                if consecutive_faults >= args.max_faults:
+                    if args.ckpt_dir:
+                        save(args.ckpt_dir, i + 1,
+                             {"params": params, "opt": opt})
+                    log.record("nonfinite", "train.loop", "checkpoint-abort",
+                               step=i, consecutive=consecutive_faults)
+                    print(f"{consecutive_faults} consecutive non-finite "
+                          "steps: checkpointed, aborting")
+                    print(log.summary())
+                    sys.exit(3)
+                time.sleep(min(
+                    args.fault_backoff * 2 ** (consecutive_faults - 1), 30.0
+                ))
+            else:
+                consecutive_faults = 0
             if ctrl is not None and ctrl.should_update(i):
                 rep = ctrl.update(i, m["dst_w_scores"], m["dst_g_scores"])
                 masks = ctrl.masks()
@@ -162,10 +228,15 @@ def main() -> None:
                     f"pruned {rep['pruned']} regrown {rep['regrown']} "
                     f"plan-edit {rep['edit_ms']:.2f}ms"
                 )
-            if dt > args.step_deadline:
+            # the first executed step pays trace+compile; a deadline sized
+            # for steady-state steps must not count that against it
+            if dt > args.step_deadline and i != start:
                 print(f"step {i} exceeded deadline ({dt:.0f}s): checkpoint + abort")
+                log.record("deadline", "train.step", "checkpoint-abort",
+                           step=i, seconds=round(dt, 3))
                 if args.ckpt_dir:
                     save(args.ckpt_dir, i + 1, {"params": params, "opt": opt})
+                print(log.summary())
                 return
             if (i + 1) % 5 == 0 or i == start:
                 line = f"step {i+1:5d} loss {float(m['loss']):.4f} gnorm {float(m['grad_norm']):.2f} {dt:.2f}s"
@@ -187,7 +258,10 @@ def main() -> None:
             if args.ckpt_dir and ((i + 1) % args.ckpt_every == 0 or guard.should_save):
                 save(args.ckpt_dir, i + 1, {"params": params, "opt": opt})
                 if guard.should_save:
+                    log.record("preempt", "train.loop", "checkpoint-exit",
+                               step=i)
                     print("preemption: saved, exiting")
+                    print(log.summary())
                     return
     # per-device balance report: how evenly each cached plan's ragged-grid
     # work would deal across the policy's row-parallel shards
@@ -199,6 +273,8 @@ def main() -> None:
         if "imbalance" in ps:
             line += f" imbalance={ps['imbalance']:.2f}x over {n_shards} devices"
         print(line)
+    if len(log):
+        print(log.summary())
     print("done")
 
 

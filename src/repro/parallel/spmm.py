@@ -220,15 +220,45 @@ def _shard_k(be, req: KernelRequest, mesh, names):
     return out.astype(req.out_dtype or req.a.dtype)
 
 
+def _injected_shard_fault(site: str) -> bool:
+    """Consult the ambient :class:`repro.resilience.FaultPlan` (contextvar
+    probe — nanoseconds when none is installed).  ``shard_stall`` sleeps
+    host-side at dispatch (a slow shard, detected by the callers' step/TTL
+    deadlines); ``shard_fail`` returns True, which the executors contain by
+    degrading to the single-device path — correct output at reduced
+    throughput — with a warning and a ``ResilienceLog`` event."""
+    from repro.resilience import faults as _faults
+
+    fp = _faults.active()
+    if fp is None:
+        return False
+    t = fp.tick(site)
+    _faults.stall(fp, "shard_stall", t)
+    if fp.fires("shard_fail", t):
+        import warnings
+
+        from repro.resilience.log import record as _record
+
+        warnings.warn(
+            f"shard failure at {site} (injected): degrading to unsharded "
+            f"execution", RuntimeWarning, stacklevel=3,
+        )
+        _record("shard", site, "fallback-unsharded", tick=t)
+        return True
+    return False
+
+
 def sharded_execute_planned(backend: str, req: KernelRequest,
                             policy: ShardingPolicy, *, axis: str = "M",
                             balance: bool = True):
     """Primal planned ``a @ b`` distributed per ``policy`` (global layout in,
     global layout out).  Falls back to the unsharded executor when the mesh
-    lacks the axis or the blocked shape doesn't divide the shard count."""
+    lacks the axis, the blocked shape doesn't divide the shard count, or a
+    shard is (injected as) failed."""
     be = get_backend(backend)
     names, n_shards = policy.spmm_axes(axis)
-    if n_shards <= 1 or not _divides(req, axis, n_shards):
+    if (n_shards <= 1 or not _divides(req, axis, n_shards)
+            or _injected_shard_fault("parallel.execute_planned")):
         return be.execute_planned(req)
     if axis == "M":
         return _shard_m(be, req, policy.mesh, names, balance, fused=False)
@@ -251,7 +281,8 @@ def sharded_execute_fused(backend: str, req: KernelRequest,
         )
     be = get_backend(backend)
     names, n_shards = policy.spmm_axes(axis)
-    if n_shards <= 1 or not _divides(req, axis, n_shards):
+    if (n_shards <= 1 or not _divides(req, axis, n_shards)
+            or _injected_shard_fault("parallel.execute_fused")):
         return be.execute_fused(req)
     if axis == "M":
         return _shard_m(be, req, policy.mesh, names, balance, fused=True)

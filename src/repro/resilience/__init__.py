@@ -1,0 +1,58 @@
+"""Fault injection + graceful degradation for serving and training.
+
+Two halves, one contract:
+
+* :mod:`repro.resilience.faults` — a deterministic, seeded
+  :class:`FaultPlan` harness that injects faults at the runtime's existing
+  trust boundaries (poisoned logits/loss/grads, corrupt plan/cache/DB
+  metadata, failed allocations, slow/failed shards, stragglers,
+  preemption), replayable from one seed.
+
+* :mod:`repro.resilience.log` — the structured :class:`ResilienceLog` every
+  detection site reports into: fault class, detection site, containment
+  action.
+
+The contract (pinned by ``tests/test_resilience.py`` and the
+``serve_chaos_micro`` bench): every injected fault class is *detected* and
+*contained* — healthy batch-mates' tokens stay bit-identical to a
+fault-free run, no unhandled exception escapes the engine/step loop, and
+every degradation lands in the log.
+"""
+from repro.resilience.faults import (  # noqa: F401
+    DB_CORRUPTIONS,
+    KINDS,
+    PLAN_CORRUPTIONS,
+    FaultPlan,
+    FaultSpec,
+    SimulatedAllocFailure,
+    SimulatedFault,
+    SimulatedShardFailure,
+    active,
+    corrupt_cache_entry,
+    corrupt_db_file,
+    corrupt_file,
+    corrupt_plan,
+    inject,
+    maybe_alloc_failure,
+    poison_slots,
+    stall,
+    train_poison,
+)
+from repro.resilience.log import (  # noqa: F401
+    ResilienceEvent,
+    ResilienceLog,
+    ambient_log,
+    capture_warnings,
+    record,
+    use_log,
+)
+
+__all__ = [
+    "FaultPlan", "FaultSpec", "KINDS", "PLAN_CORRUPTIONS", "DB_CORRUPTIONS",
+    "SimulatedFault", "SimulatedAllocFailure", "SimulatedShardFailure",
+    "inject", "active", "corrupt_plan", "corrupt_cache_entry",
+    "corrupt_db_file", "corrupt_file", "poison_slots", "train_poison",
+    "maybe_alloc_failure", "stall",
+    "ResilienceEvent", "ResilienceLog", "use_log", "ambient_log", "record",
+    "capture_warnings",
+]

@@ -577,6 +577,35 @@ class PlanCache:
             out.append(entry)
         return out
 
+    def scrub(self, *, level: str | None = None) -> list[tuple]:
+        """Re-verify every live entry and evict the corrupt ones.
+
+        The recovery half of cache poisoning: store-time validation proves
+        an entry was good when it went in; ``scrub`` is for when something
+        mutated it afterwards (a chaos injector here; bad in-place edits or
+        memory corruption in the wild).  Returns ``[(key, error), ...]`` for
+        the evicted entries — an evicted plan is rebuilt from its operand on
+        the next ``get_or_build`` miss.  ``level`` defaults to ``"full"``:
+        a scrub is an explicit offline sweep, so it pays for the O(entries)
+        content checks that catch what the cheap boundary tier cannot
+        (index bounds, queue-entry consistency).
+        """
+        from repro.analysis.plan_check import (  # local: keep import light
+            PlanVerificationError, check_plan,
+        )
+
+        level = level or "full"
+        bad = []
+        for k, (_, plan) in list(self._entries.items()):
+            if isinstance(plan.nnz, jax.core.Tracer):  # pragma: no cover
+                continue  # never cached; defensive
+            try:
+                check_plan(plan, level=level)
+            except PlanVerificationError as e:
+                bad.append((k, str(e)))
+                del self._entries[k]
+        return bad
+
     def clear(self) -> None:
         self._entries.clear()
         self.hits = 0

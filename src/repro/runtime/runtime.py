@@ -284,6 +284,44 @@ class Runtime:
             return False
 
     # -- execution ---------------------------------------------------------
+    def _recovered_plan(self, plan: SparsityPlan, operand) -> SparsityPlan:
+        """Boundary *recovery* for caller-provided plans (``validate`` !=
+        ``"off"``, concrete plans only): verify the metadata, and on
+        corruption degrade loudly — warn, record a ``ResilienceLog`` event,
+        and replan from the operand's values — instead of executing a
+        schedule that would drop or double-count blocks.  The contained
+        output is numerically correct; the caller's broken plan is the
+        thing that gets discarded.  ``operand`` is already post-transpose
+        for ``side="B"`` (i.e. ``b.T``)."""
+        if self.validate == "off" or isinstance(plan.nnz, jax.core.Tracer):
+            return plan
+        from repro.analysis.plan_check import PlanVerificationError, check_plan
+
+        try:
+            check_plan(plan, level=self.validate)
+            return plan
+        except PlanVerificationError as e:
+            import warnings
+
+            from repro.resilience.log import record as _record
+
+            warnings.warn(
+                f"corrupt SparsityPlan at Runtime.matmul boundary "
+                f"(side={plan.side!r}, shape={plan.shape}): {e}; replanning "
+                f"from operand values",
+                RuntimeWarning, stacklevel=3,
+            )
+            _record("plan-corrupt", "runtime.matmul", "replan",
+                    side=plan.side, shape=plan.shape, error=str(e))
+            # keep the plan's own geometry when it still divides the operand
+            # (corruption usually hits the schedule, not the blocking); a
+            # geometry-level corruption falls back to the fitted defaults
+            bm = (plan.bm if plan.bm > 0 and operand.shape[0] % plan.bm == 0
+                  else _fit_block(self.bm, operand.shape[0]))
+            bk = (plan.bk if plan.bk > 0 and operand.shape[1] % plan.bk == 0
+                  else _fit_block(self.bk, operand.shape[1]))
+            return plan_operand(operand, bm, bk, side=plan.side)
+
     def _dtype_prologue(self, a, b):
         """Shared matmul/matmul_fused entry checks: enforce the fp32
         accumulator policy and apply the compute-dtype cast."""
@@ -332,6 +370,8 @@ class Runtime:
         if side == "B":
             if plan is None:
                 plan = rt.plan(b, key=plan_key, side="B")
+            else:
+                plan = self._recovered_plan(plan, b.T)
             out_t = kernel.matmul_planned(
                 plan, b.T, a.T, bn=rt.lane(a.shape[0], rt.bm), out_dtype=a.dtype,
                 plan_cache=self.plan_cache, plan_key=("B", plan_key),
@@ -347,6 +387,8 @@ class Runtime:
                 plan = rt.plan(a)
             else:
                 plan = rt.plan(a, key=plan_key)
+        else:
+            plan = self._recovered_plan(plan, a)
         return kernel.matmul_planned(
             plan, a, b, bn=rt.lane(b.shape[1]), out_dtype=a.dtype,
             plan_cache=self.plan_cache, plan_key=("A", plan_key),
@@ -399,6 +441,8 @@ class Runtime:
                 plan = dense_operand_plan(a.shape, a.dtype, bm=rt.bm, bk=rt.bk)
             else:
                 plan = rt.plan(a, key=plan_key)
+        else:
+            plan = self._recovered_plan(plan, a)
         return kernel.matmul_fused(
             plan, a, b, bias=bias, residual=residual, activation=activation,
             bn=rt.lane(b.shape[1]), out_dtype=a.dtype,

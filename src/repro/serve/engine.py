@@ -49,6 +49,18 @@ RNG: every request's sampling stream is ``fold_in(PRNGKey(seed), rid)``,
 split before first use and advanced per emitted token — so sampled output
 is deterministic per (seed, rid) and independent of which slot the request
 lands in or what else shares the batch.
+
+Resilience (``repro.resilience``): admission is priority-with-aging over a
+*bounded* pending queue (``QueueFull`` is typed so callers can retry with
+backoff, distinct from shed-by-policy), every request can carry a TTL
+deadline (expired requests are evicted from queue and slots), admission can
+shed load against a work budget priced by the cached plans'
+``total_work``, and the decode scan carries an in-graph ``isfinite``
+watchdog that retires a NaN/Inf-poisoned slot with an error status without
+perturbing healthy batch-mates (their sampling is per-row, their KV rows
+are per-slot — bit-identity is asserted by the chaos suite) and without
+changing the scan's shape signature.  Every degradation lands in the
+engine's :class:`repro.resilience.ResilienceLog`.
 """
 from __future__ import annotations
 
@@ -66,8 +78,23 @@ import numpy as np
 from repro import runtime as rtm
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.resilience import faults as rfaults
+from repro.resilience import log as rlog
 
-__all__ = ["Request", "Scheduler", "ServeEngine", "prefill_step", "decode_one", "generate"]
+__all__ = [
+    "Request", "Scheduler", "ServeEngine", "QueueFull",
+    "prefill_step", "decode_one", "generate",
+]
+
+
+class QueueFull(RuntimeError):
+    """The bounded pending queue is at capacity.
+
+    Typed (and distinct from shed-by-policy, which *admits* the submit and
+    later finishes the victim with ``finish_reason="shed"``) so callers can
+    catch it and retry with backoff instead of silently growing an
+    unbounded queue.
+    """
 
 
 def prefill_step(params, cfg: ModelConfig, batch, mesh=None):
@@ -97,52 +124,80 @@ DECODE_TRACES = 0
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "rt", "steps", "temperature", "eos_id", "pad_id"),
+    static_argnames=("cfg", "rt", "steps", "temperature", "eos_id", "pad_id",
+                     "watchdog"),
     donate_argnums=(1, 2, 3, 4, 5, 6),
 )
-def _decode_chunk(params, caches, tok, pos, active, remaining, keys, *,
-                  cfg, rt, steps, temperature, eos_id, pad_id):
+def _decode_chunk(params, caches, tok, pos, active, remaining, keys, poison, *,
+                  cfg, rt, steps, temperature, eos_id, pad_id, watchdog):
     """``steps`` decode steps over the packed slot batch, as one program.
 
     Carry: (tok [B], caches, pos [B], active [B] bool, remaining [B], keys
-    [B,2]).  Inactive slots still flow through the model (static shapes) but
-    their position is frozen, their emission masked to ``pad_id`` and their
-    RNG stream untouched; any KV rows they scribble at the frozen position
-    are overwritten by a later occupant's own write-before-read at that
-    position, and masked out of attention until then.
+    [B,2], faulted [B] bool).  Inactive slots still flow through the model
+    (static shapes) but their position is frozen, their emission masked to
+    ``pad_id`` and their RNG stream untouched; any KV rows they scribble at
+    the frozen position are overwritten by a later occupant's own
+    write-before-read at that position, and masked out of attention until
+    then.
 
-    Emits ``(tokens [steps, B], emitted [steps, B])``; donated buffers make
-    the cache update in place.
+    ``poison`` is the fault-injection hook: int32 [B] codes (0 clean, 1 NaN,
+    2 Inf) overwriting a slot's last-position logits — the same trust
+    boundary a numerically-diverged model or corrupted activation would
+    poison in production.  With ``watchdog`` (static) the program checks
+    ``isfinite`` on every slot's logits row each step and *retires* a
+    non-finite slot in-graph: its emission is masked to ``pad_id``, its RNG
+    and position freeze, and it leaves ``active``; the per-row sampling and
+    per-slot KV layout mean healthy slots' tokens are bit-identical to a
+    fault-free run.  The shape signature is unchanged by faults — the
+    program still traces once.
+
+    Emits ``(tokens [steps, B], emitted [steps, B])`` plus ``faulted [B]``
+    (which slots the watchdog retired); donated buffers make the cache
+    update in place.
     """
     global DECODE_TRACES
     DECODE_TRACES += 1
 
     def step(carry, _):
-        tok, caches, pos, active, remaining, keys = carry
+        tok, caches, pos, active, remaining, keys, faulted = carry
         with rtm.use(rt):
             logits, caches = M.decode_step(
                 params, cfg, caches, {"tokens": tok[:, None]}, pos
             )
+        row = logits[:, -1].astype(jnp.float32)
+        row = jnp.where((poison == 1)[:, None], jnp.float32(jnp.nan), row)
+        row = jnp.where((poison == 2)[:, None], jnp.float32(jnp.inf), row)
+        if watchdog:
+            finite = jnp.all(jnp.isfinite(row), axis=-1)
+            faulted = faulted | (active & ~finite)
+            good = active & finite
+            # a non-finite row would make categorical/argmax emit garbage
+            # into *this* row only — but sanitize before sampling anyway so
+            # the sampler never sees NaN (some backends are strict)
+            row = jnp.where(good[:, None], row, jnp.zeros_like(row))
+        else:
+            good = active
         splits = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
         nxt_keys, subs = splits[:, 0], splits[:, 1]
-        nxt = _sample_rows(logits[:, -1].astype(jnp.float32), subs, temperature)
-        nxt = jnp.where(active, nxt, jnp.int32(pad_id))
-        live = active.astype(jnp.int32)
+        nxt = _sample_rows(row, subs, temperature)
+        nxt = jnp.where(good, nxt, jnp.int32(pad_id))
+        live = good.astype(jnp.int32)
         pos = pos + live
         remaining = remaining - live
         done = remaining <= 0
         if eos_id is not None:
             done = done | (nxt == jnp.int32(eos_id))
-        emitted = active
-        keys = jnp.where(active[:, None], nxt_keys, keys)
-        active = active & ~done
-        return (nxt, caches, pos, active, remaining, keys), (nxt, emitted)
+        emitted = good
+        keys = jnp.where(good[:, None], nxt_keys, keys)
+        active = good & ~done
+        return (nxt, caches, pos, active, remaining, keys, faulted), (nxt, emitted)
 
-    carry = (tok, caches, pos, active, remaining, keys)
-    (tok, caches, pos, active, remaining, keys), (toks, emitted) = jax.lax.scan(
-        step, carry, None, length=steps
+    faulted0 = jnp.zeros(active.shape, bool)
+    carry = (tok, caches, pos, active, remaining, keys, faulted0)
+    (tok, caches, pos, active, remaining, keys, faulted), (toks, emitted) = (
+        jax.lax.scan(step, carry, None, length=steps)
     )
-    return caches, tok, pos, active, remaining, keys, toks, emitted
+    return caches, tok, pos, active, remaining, keys, toks, emitted, faulted
 
 
 @dataclasses.dataclass
@@ -153,31 +208,54 @@ class Request:
     prompt: Any  # int32 [s]
     max_new: int
     arrival: float = 0.0  # traffic-replay timestamp (seconds, engine clock)
+    priority: int = 0  # higher admits first (aged so low never starves)
+    deadline: float | None = None  # absolute engine-clock TTL expiry
     # engine-filled:
     tokens: list = dataclasses.field(default_factory=list)
     finished: bool = False
-    finish_reason: str | None = None  # "eos" | "length"
+    finish_reason: str | None = None  # "eos"|"length"|"error"|"expired"|"shed"
+    error: str | None = None  # detail for finish_reason == "error"
     slot: int | None = None
+    retries: int = 0  # admission retries after transient (alloc) failures
     t_submit: float = 0.0
     t_admit: float = 0.0
     t_first: float = 0.0  # first token (produced at admission, from prefill)
     t_finish: float = 0.0
 
+    @property
+    def ok(self) -> bool:
+        """Finished by producing its output (EOS or budget), not degraded."""
+        return self.finished and self.finish_reason in ("eos", "length")
+
 
 class Scheduler:
-    """Slot table + FIFO admission.  Pure host-side bookkeeping.
+    """Slot table + bounded priority admission.  Pure host-side bookkeeping.
 
-    ``admit()`` packs pending requests into free batch slots (EOS- or
-    budget-finished slots freed by ``evict`` are backfilled in FIFO order);
-    the engine turns each admission into a prefill + slot write.
+    ``admit(now)`` packs pending requests into free batch slots by
+    *effective* priority ``priority + age_boost * (now - t_submit)`` — a
+    strictly-higher-priority request jumps the queue, but an aging
+    lower-priority one eventually outranks fresh high-priority traffic, so
+    nothing starves; equal effective priorities break ties in submission
+    order, which with the default ``priority=0`` everywhere degenerates to
+    exact FIFO.  The pending queue is bounded (``max_pending``):
+    ``submit`` raises :class:`QueueFull` at capacity so backpressure is a
+    typed signal, not an unbounded deque.
     """
 
-    def __init__(self, slots: int):
+    def __init__(self, slots: int, *, max_pending: int | None = None,
+                 age_boost: float = 0.1):
         self.num_slots = slots
+        self.max_pending = max_pending
+        self.age_boost = float(age_boost)
         self.pending: collections.deque[Request] = collections.deque()
         self.table: list[Request | None] = [None] * slots
 
     def submit(self, req: Request) -> None:
+        if self.max_pending is not None and len(self.pending) >= self.max_pending:
+            raise QueueFull(
+                f"pending queue at capacity ({self.max_pending}); retry with "
+                f"backoff"
+            )
         self.pending.append(req)
 
     @property
@@ -190,13 +268,33 @@ class Scheduler:
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.table) if r is None]
 
-    def admit(self) -> list[tuple[int, Request]]:
-        """Place pending requests into free slots; returns the placements."""
+    def effective_priority(self, req: Request, now: float) -> float:
+        return req.priority + self.age_boost * max(now - req.t_submit, 0.0)
+
+    def expire_pending(self, now: float) -> list[Request]:
+        """Drop (and return) pending requests whose deadline has passed."""
+        expired = [r for r in self.pending
+                   if r.deadline is not None and r.deadline <= now]
+        if expired:
+            dead = set(id(r) for r in expired)
+            self.pending = collections.deque(
+                r for r in self.pending if id(r) not in dead
+            )
+        return expired
+
+    def admit(self, now: float = 0.0) -> list[tuple[int, Request]]:
+        """Place pending requests into free slots by effective priority
+        (aged); returns the placements."""
         placed = []
         for slot in self.free_slots():
             if not self.pending:
                 break
-            req = self.pending.popleft()
+            best = max(
+                range(len(self.pending)),
+                key=lambda i: (self.effective_priority(self.pending[i], now), -i),
+            )
+            req = self.pending[best]
+            del self.pending[best]
             req.slot = slot
             self.table[slot] = req
             placed.append((slot, req))
@@ -226,10 +324,19 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 256, rt: "rtm.Runtime | None" = None,
                  temperature: float = 0.0, eos_id: int | None = None,
-                 pad_id: int = 0, seed: int = 0, chunk: int = 8):
+                 pad_id: int = 0, seed: int = 0, chunk: int = 8,
+                 max_pending: int | None = None, age_boost: float = 0.1,
+                 work_budget: int | None = None, watchdog: bool = True,
+                 fault_plan: "rfaults.FaultPlan | None" = None,
+                 log: "rlog.ResilienceLog | None" = None):
         self.params = params
         self.cfg = cfg
         self.rt = rtm.resolve(rt)
+        self.watchdog = bool(watchdog)
+        self.work_budget = work_budget
+        self.fault_plan = fault_plan
+        self.log = log if log is not None else (rlog.ambient_log()
+                                                or rlog.ResilienceLog())
         if self.rt.geometry == "auto" and self.rt.tuning_db is not None:
             # prewarm the TuningDB memo for the decode hot-path cells (FFN
             # up/down projections at slot-batch width) so the first jitted
@@ -244,13 +351,17 @@ class ServeEngine:
         self.eos_id = eos_id
         self.pad_id = int(pad_id)
         self.chunk = max(int(chunk), 1)
-        self.sched = Scheduler(slots)
+        self.sched = Scheduler(slots, max_pending=max_pending,
+                               age_boost=age_boost)
         self._rids = itertools.count()
         self._base_key = jax.random.PRNGKey(seed)
         self._requests: dict[int, Request] = {}
         self._t0 = time.monotonic()
-        # packed per-slot device state
-        self.caches = self.rt.slot_caches(cfg, slots, self.max_len)
+        # packed per-slot device state; a failed cache allocation degrades
+        # to half the slot count (contained capacity loss, not a crash)
+        self.caches, slots = self._alloc_slot_caches(cfg, slots)
+        self.sched.num_slots = slots
+        self.sched.table = self.sched.table[:slots]
         self.tok = jnp.zeros((slots,), jnp.int32)
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.active = jnp.zeros((slots,), bool)
@@ -260,11 +371,40 @@ class ServeEngine:
         self.tokens_out = 0
         self.chunks_run = 0
         self.steps_run = 0
+        self._zero_poison = jnp.zeros((slots,), jnp.int32)
+
+    def _alloc_slot_caches(self, cfg, slots: int):
+        """Allocate the packed decode caches, halving ``slots`` (down to 1)
+        on allocation failure — serving degrades to reduced concurrency
+        instead of dying at construction."""
+        while True:
+            try:
+                rfaults.maybe_alloc_failure(
+                    self.fault_plan or rfaults.active(), "slot_caches"
+                )
+                return self.rt.slot_caches(cfg, slots, self.max_len), slots
+            except (rfaults.SimulatedAllocFailure, MemoryError) as e:
+                if slots <= 1:
+                    raise
+                self.log.record("alloc", "serve.slot_caches", "halve-slots",
+                                slots=slots, error=str(e))
+                slots = slots // 2
 
     # -- submission --------------------------------------------------------
-    def submit(self, prompt, max_new: int = 32, arrival: float = 0.0) -> int:
+    def submit(self, prompt, max_new: int = 32, arrival: float = 0.0, *,
+               priority: int = 0, ttl: float | None = None) -> int:
         """Queue one request; returns its rid.  ``prompt`` is int32 [s] with
-        ``s + max_new <= max_len``."""
+        ``s + max_new <= max_len``.
+
+        ``priority`` orders admission (higher first, aged — see
+        :meth:`Scheduler.admit`); ``ttl`` seconds bounds the request's whole
+        lifetime: a request still queued or still decoding at
+        ``now + ttl`` is evicted with ``finish_reason="expired"``.  Raises
+        :class:`QueueFull` when the bounded pending queue is at capacity
+        (retry with backoff); under a work budget the engine may instead
+        admit the submit and *shed* the cheapest-to-drop request
+        (``finish_reason="shed"``).
+        """
         prompt = jnp.asarray(prompt, jnp.int32)
         if prompt.ndim != 1:
             raise ValueError(f"prompt must be rank-1, got {prompt.shape}")
@@ -275,11 +415,89 @@ class ServeEngine:
                 f"prompt ({prompt.shape[0]}) + max_new ({max_new}) exceeds "
                 f"engine max_len ({self.max_len})"
             )
+        now = self._now()
         req = Request(rid=next(self._rids), prompt=prompt, max_new=int(max_new),
-                      arrival=float(arrival), t_submit=self._now())
+                      arrival=float(arrival), priority=int(priority),
+                      deadline=None if ttl is None else now + float(ttl),
+                      t_submit=now)
+        try:
+            self.sched.submit(req)
+        except QueueFull:
+            self.log.record("queue", "serve.submit", "reject",
+                            rid=req.rid, pending=len(self.sched.pending))
+            raise
         self._requests[req.rid] = req
-        self.sched.submit(req)
+        self._shed_to_budget(now)
         return req.rid
+
+    # -- plan-aware load shedding ------------------------------------------
+    def _plan_cost(self) -> float:
+        """Per-token admission cost from the cached plans' ``total_work``
+        (the exact v3 ragged-grid steps a decode step replays) — the
+        ROADMAP's plan-aware cost model.  Falls back to 1.0 (token units)
+        when no plan is cached (dense runtime / cold cache)."""
+        total = sum(ps["total_work"] for ps in self.rt.plan_cache.plan_stats())
+        return float(total) if total > 0 else 1.0
+
+    def _outstanding_work(self) -> float:
+        cost = self._plan_cost()
+        work = 0.0
+        for r in self.sched.pending:
+            work += cost * r.max_new
+        for _, r in self.sched.occupied():
+            work += cost * max(r.max_new - len(r.tokens), 0)
+        return work
+
+    def _shed_to_budget(self, now: float) -> list[Request]:
+        """Shed pending requests (lowest effective priority first) until the
+        outstanding work estimate fits the budget.  Shedding is a policy
+        decision recorded on the victim (``finish_reason="shed"``) — NOT a
+        :class:`QueueFull`, which signals capacity, not cost."""
+        if self.work_budget is None:
+            return []
+        shed: list[Request] = []
+        while self.sched.pending and self._outstanding_work() > self.work_budget:
+            victim = min(
+                self.sched.pending,
+                key=lambda r: (self.sched.effective_priority(r, now), -r.rid),
+            )
+            self.sched.pending.remove(victim)
+            victim.finished = True
+            victim.finish_reason = "shed"
+            victim.t_finish = now
+            self.log.record(
+                "queue", "serve.admission", "shed", rid=victim.rid,
+                priority=victim.priority, cost=self._plan_cost() * victim.max_new,
+                budget=self.work_budget,
+            )
+            shed.append(victim)
+        return shed
+
+    # -- deadlines ---------------------------------------------------------
+    def _expire(self, now: float) -> list[Request]:
+        """TTL expiry: drop pending requests and evict *running* slots whose
+        deadline passed (the slot's device lane is deactivated; its cache
+        rows are overwritten by the next occupant's slot write)."""
+        out = []
+        for req in self.sched.expire_pending(now):
+            req.finished = True
+            req.finish_reason = "expired"
+            req.t_finish = now
+            self.log.record("deadline", "serve.pending", "expire",
+                            rid=req.rid, waited=now - req.t_submit)
+            out.append(req)
+        for slot, req in self.sched.occupied():
+            if req.deadline is not None and req.deadline <= now:
+                self.sched.evict(slot)
+                self.active = self.active.at[slot].set(False)
+                req.finished = True
+                req.finish_reason = "expired"
+                req.t_finish = now
+                self.log.record("deadline", "serve.slot", "expire",
+                                rid=req.rid, slot=slot,
+                                emitted=len(req.tokens))
+                out.append(req)
+        return out
 
     def _now(self) -> float:
         return time.monotonic() - self._t0
@@ -299,6 +517,9 @@ class ServeEngine:
         prompts = jnp.stack([r.prompt for _, r in placements])
         with rtm.use(self.rt):
             logits, caches = M.prefill(self.params, self.cfg, {"tokens": prompts})
+            rfaults.maybe_alloc_failure(
+                self.fault_plan or rfaults.active(), "grow_caches"
+            )
             part = self.rt.grow_caches(self.cfg, caches, g, self.max_len)
             axes = rtm.cache_batch_axes(self.cfg)
             for j, (slot, _) in enumerate(placements):
@@ -334,15 +555,40 @@ class ServeEngine:
             if done:
                 req.finish_reason = "eos" if is_eos else "length"
 
+    #: admission retries before a transient-alloc-failed request is failed
+    MAX_ADMIT_RETRIES = 3
+
     def _admit_all(self) -> None:
         """Admit pending requests into free slots, batching same-length
-        prompts into one prefill each (prefill compiles once per length)."""
-        placements = self.sched.admit()
+        prompts into one prefill each (prefill compiles once per length).
+
+        A transient allocation failure during a group's prefill/slot-write
+        is contained: the group's requests go back to the pending queue
+        (bounded retries, then ``finish_reason="error"``) — one bad
+        admission never kills the engine loop or the healthy slots."""
+        placements = self.sched.admit(self._now())
         by_len: dict[int, list[tuple[int, Request]]] = {}
         for slot, req in placements:
             by_len.setdefault(req.prompt.shape[0], []).append((slot, req))
         for group in by_len.values():
-            self._admit_group(group)
+            try:
+                self._admit_group(group)
+            except (rfaults.SimulatedAllocFailure, MemoryError) as e:
+                now = self._now()
+                for slot, req in group:
+                    self.sched.evict(slot)
+                    req.retries += 1
+                    if req.retries > self.MAX_ADMIT_RETRIES:
+                        req.finished = True
+                        req.finish_reason = "error"
+                        req.error = f"admission failed: {e}"
+                        req.t_finish = now
+                        self.log.record("alloc", "serve.admit", "fail-request",
+                                        rid=req.rid, retries=req.retries)
+                    else:
+                        self.sched.pending.appendleft(req)
+                        self.log.record("alloc", "serve.admit", "requeue",
+                                        rid=req.rid, retries=req.retries)
 
     def _retire_finished(self) -> list[Request]:
         """Evict every occupied slot whose device state went inactive."""
@@ -363,34 +609,67 @@ class ServeEngine:
 
     # -- the serving loop --------------------------------------------------
     def step(self) -> list[Request]:
-        """Admit pending requests, run one decode chunk, retire finished.
+        """Expire, admit, run one decode chunk, retire finished.
 
-        Returns the requests that finished during this call."""
+        Returns the requests that finished during this call (including
+        expired/shed/errored ones).  No fault class escapes this loop: the
+        watchdog retires poisoned slots in-graph, admission failures requeue
+        or fail the one request, deadlines evict, shedding drops — healthy
+        slots keep decoding bit-identically throughout."""
+        now = self._now()
+        if self.fault_plan is not None:
+            rfaults.stall(self.fault_plan, "step_stall",
+                          self.fault_plan.tick("serve.step"))
+        finished = self._expire(now)
+        finished += self._shed_to_budget(now)
         self._admit_all()
-        finished = self._retire_finished()  # requests done at admission
+        finished += self._retire_finished()  # requests done at admission
         # backfill slots freed by admission-time finishes before decoding
         self._admit_all()
         finished += self._retire_finished()
         if not bool(np.any(np.asarray(self.active))):
             return finished
+        poison = self._chunk_poison()
         out = _decode_chunk(
             self.params, self.caches, self.tok, self.pos, self.active,
-            self.remaining, self.keys,
+            self.remaining, self.keys, poison,
             cfg=self.cfg, rt=self.rt, steps=self.chunk,
             temperature=self.temperature, eos_id=self.eos_id, pad_id=self.pad_id,
+            watchdog=self.watchdog,
         )
         (self.caches, self.tok, self.pos, self.active, self.remaining,
-         self.keys, toks, emitted) = out
+         self.keys, toks, emitted, faulted) = out
         self.chunks_run += 1
         self.steps_run += self.chunk
         toks = np.asarray(toks)          # [steps, slots]
         emitted = np.asarray(emitted)    # [steps, slots] bool
+        faulted = np.asarray(faulted)    # [slots] bool
         for slot, req in self.sched.occupied():
             new = toks[emitted[:, slot], slot].tolist()
             req.tokens.extend(new)
             self.tokens_out += len(new)
+            if faulted[slot]:
+                # watchdog retired this slot in-graph; record the error
+                # status before _retire_finished assigns a reason
+                req.finish_reason = "error"
+                req.error = "non-finite logits (watchdog)"
+                self.log.record("nonfinite", "serve.decode.watchdog",
+                                "retire-slot", rid=req.rid, slot=slot,
+                                chunk=self.chunks_run - 1,
+                                emitted=len(req.tokens))
         finished += self._retire_finished()
         return finished
+
+    def _chunk_poison(self):
+        """The [slots] poison-code vector for this chunk (all zeros — one
+        cached buffer, no per-chunk upload — unless a fault plan fires)."""
+        if self.fault_plan is None:
+            return self._zero_poison
+        p = rfaults.poison_slots(
+            self.fault_plan, self.fault_plan.tick("serve.decode_chunk"),
+            self.sched.num_slots,
+        )
+        return self._zero_poison if not p.any() else jnp.asarray(p)
 
     def run(self) -> dict[int, list[int]]:
         """Drain every submitted request; returns {rid: emitted tokens}."""
@@ -414,6 +693,7 @@ class ServeEngine:
             "slots": self.sched.num_slots,
             "decode_traces": DECODE_TRACES,
             "plan_cache": self.rt.plan_cache.stats(),
+            "resilience_events": len(self.log),
         }
 
 

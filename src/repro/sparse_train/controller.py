@@ -225,10 +225,21 @@ class DynamicSparsityController:
                 # the forward (transposed-operand) plan swapped — one
                 # selection, both schedules spliced (and, under the
                 # runtime's validate policy, structurally verified)
-                u.bwd[l] = edit_plan(u.bwd[l], delta, validate=self.rt.validate)
-                u.fwd[l] = edit_plan(
-                    u.fwd[l], delta.swapped(), validate=self.rt.validate
-                )
+                try:
+                    u.bwd[l] = edit_plan(u.bwd[l], delta, validate=self.rt.validate)
+                    u.fwd[l] = edit_plan(
+                        u.fwd[l], delta.swapped(), validate=self.rt.validate
+                    )
+                except ValueError as e:
+                    # (PlanVerificationError is a ValueError.)  When the
+                    # delta is consistent with the mask — the controller's
+                    # source of truth — the failure is plan-side corruption
+                    # or splice damage: degrade LOUDLY to a from-scratch
+                    # replan of the post-delta mask.  An inconsistent delta
+                    # is a controller bug; re-raise.
+                    if not self._delta_consistent(u.mask[l], delta):
+                        raise
+                    self._replan_from_scratch(u, l, delta, e)
                 m = u.mask[l]
                 if len(delta.prune):
                     m[delta.prune[:, 0], delta.prune[:, 1]] = False
@@ -246,6 +257,51 @@ class DynamicSparsityController:
             "edit_ms": edit_ms,
         }
         return self.last_report
+
+    @staticmethod
+    def _delta_consistent(mask, delta: PlanDelta) -> bool:
+        """Is the delta applicable to the mask (prunes active, regrows
+        inactive)?  Distinguishes plan-side corruption (recoverable — the
+        mask is the source of truth) from controller drift (a bug)."""
+        p, r = delta.prune, delta.regrow
+        if len(p) and not mask[p[:, 0], p[:, 1]].all():
+            return False
+        if len(r) and mask[r[:, 0], r[:, 1]].any():
+            return False
+        return True
+
+    def _replan_from_scratch(self, u: _Unit, l: int, delta: PlanDelta,
+                             err: Exception) -> None:
+        """Graceful degradation for a failed incremental edit: rebuild both
+        of layer ``l``'s plans from the post-delta mask (bit-identical to
+        what a successful splice would have produced — the incremental path
+        is pinned to the from-scratch path by the plan-edit tests), warn,
+        and record the event."""
+        import warnings
+
+        from repro.resilience.log import record as _record
+
+        warnings.warn(
+            f"incremental plan edit failed for {u.path}[{l}] ({err}); "
+            f"degrading to a from-scratch replan of the mask",
+            RuntimeWarning, stacklevel=3,
+        )
+        _record("plan-corrupt", "sparse_train.edit_plan", "replan",
+                path=u.path, layer=l, error=str(err))
+        newmask = u.mask[l].copy()
+        if len(delta.prune):
+            newmask[delta.prune[:, 0], delta.prune[:, 1]] = False
+        if len(delta.regrow):
+            newmask[delta.regrow[:, 0], delta.regrow[:, 1]] = True
+        bk, bn = u.block
+        k, n = u.kb * bk, u.nb * bn
+        dtype = u.bwd[l].dtype
+        u.bwd[l] = plan_from_block_mask(
+            newmask, bm=bk, bk=bn, shape=(k, n), dtype=dtype
+        )
+        u.fwd[l] = plan_from_block_mask(
+            newmask.T, bm=bn, bk=bk, shape=(n, k), dtype=dtype, side="B"
+        )
 
     @staticmethod
     def _select(mask, w_score, g_score, s_target: float, frac: float) -> PlanDelta:

@@ -114,6 +114,7 @@ def make_train_step(
     donate: bool = True,
     sparsity_taps: bool = False,
     dynamic_sparsity=None,
+    guard_nonfinite: bool = False,
 ):
     """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
     metrics)``.  ``batch`` is the global batch; with ``microbatches > 1`` it
@@ -136,6 +137,16 @@ def make_train_step(
     before the optimizer so pruned weights stay pinned at zero between
     refreshes — regrown blocks restart from zero, no straight-through
     estimator needed.
+
+    ``guard_nonfinite=True`` hardens the step: the signature gains a traced
+    ``poison`` scalar (the fault-injection hook: 0 clean, 1 NaN loss, 2 NaN
+    grads — same trust boundary a numerically-diverged model poisons), the
+    step checks ``isfinite(loss) & isfinite(grad_norm)`` in-graph, and a
+    non-finite step is *skipped*: params and optimizer state pass through
+    unchanged (elementwise select — a clean guarded step stays bit-identical
+    to an unguarded one) and ``metrics["nonfinite"]`` is 1.  The launcher
+    layers exponential backoff + checkpoint-before-abort on top
+    (``launch/train.py``).
     """
     rt = rtm.resolve(None)
     if rt.geometry == "auto" and (rt.tuning_db is None or len(rt.tuning_db) == 0):
@@ -196,11 +207,12 @@ def make_train_step(
         )(params, _zero_probes(batch), batch)
         return loss, grads, _tap_metrics(cfg, taps, gprobes)
 
-    def train_step(params, opt_state, batch, masks=None):
+    def train_step(params, opt_state, batch, masks=None, poison=None):
         from repro.sparse_train.masks import (
             apply_block_masks, block_scores, mask_density,
         )
 
+        params_in, opt_state_in = params, opt_state
         if dst_spec is not None:
             if masks is None:
                 raise TypeError(
@@ -236,6 +248,14 @@ def make_train_step(
             )
             grads = jax.tree.map(lambda g: g / microbatches, grads)
             loss = loss / microbatches
+        if guard_nonfinite:
+            # fault-injection hook at the loss/grad trust boundary: a traced
+            # poison code so chaos replays never retrace the step program
+            pc = jnp.asarray(0 if poison is None else poison, jnp.int32)
+            loss = loss + jnp.where(pc == 1, jnp.float32(jnp.nan),
+                                    jnp.float32(0.0))
+            gnan = jnp.where(pc == 2, jnp.float32(jnp.nan), jnp.float32(0.0))
+            grads = jax.tree.map(lambda g: g + gnan.astype(g.dtype), grads)
         dstm = {}
         if dst_spec is not None:
             # scores before the grad mask: RigL regrows on the *dense*
@@ -254,6 +274,16 @@ def make_train_step(
             # re-mask so stored weights always carry exactly-zero blocks
             # (what makes value planning recover the mask by construction)
             params = apply_block_masks(params, masks, dst_spec)
+        if guard_nonfinite:
+            # skip-step: a non-finite loss or gradient leaves params and
+            # optimizer state untouched (the poisoned update is computed —
+            # static program — and deselected; a clean step's select is the
+            # identity, so guarding costs no numerics)
+            ok = jnp.isfinite(loss) & jnp.isfinite(metrics["grad_norm"])
+            keep = lambda new, old: jnp.where(ok, new, old)
+            params = jax.tree.map(keep, params, params_in)
+            opt_state = jax.tree.map(keep, opt_state, opt_state_in)
+            metrics["nonfinite"] = (~ok).astype(jnp.int32)
         metrics["loss"] = loss
         metrics["param_norm"] = global_norm(params)
         metrics.update(tapm)
